@@ -1,0 +1,78 @@
+"""TwoPhaseCommit (paper Fig. 11): commit latency distribution with one
+coordinator + four participants. Baseline latency clusters at multiples of
+the group-commit period (sequential synchronous logs); speculative commits
+overlap all persists behind one barrier.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+from pathlib import Path
+
+from repro.core import LocalCluster
+from repro.services import TwoPCClient, TwoPCCoordinator, TwoPCParticipant
+
+from .common import emit, pctl, summarize, timer
+
+GC = 0.010
+N_PARTICIPANTS = 4
+
+
+def _run(root: Path, speculative: bool, n_txns: int, n_clients: int = 2):
+    cluster = LocalCluster(root, group_commit_interval=GC)
+    parts = [
+        cluster.add(
+            f"p{i}",
+            (lambda i=i: TwoPCParticipant(root / f"p{i}", speculative=speculative)),
+        )
+        for i in range(N_PARTICIPANTS)
+    ]
+    coord = cluster.add(
+        "coord", lambda: TwoPCCoordinator(root / "coord", speculative=speculative)
+    )
+    lat_ms = []
+    lock = threading.Lock()
+
+    def client(cid: int, count: int):
+        cl = TwoPCClient(coord, parts)
+        mine = []
+        for i in range(count):
+            with timer(mine):
+                ok = cl.run(f"txn{cid}_{i}")
+                assert ok is not None
+        with lock:
+            lat_ms.extend(mine)
+
+    try:
+        threads = [
+            threading.Thread(target=client, args=(c, n_txns // n_clients))
+            for c in range(n_clients)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        cluster.shutdown()
+    return lat_ms
+
+
+def run(quick: bool = True, csv_path=None):
+    rows = []
+    n = 60 if quick else 400
+    for spec in (True, False):
+        with tempfile.TemporaryDirectory() as td:
+            lat = _run(Path(td), spec, n)
+            tag = "dse" if spec else "baseline"
+            s = summarize(f"2pc/{tag}", lat)
+            # paper Fig. 11 observation: fraction finishing under 2 group commits
+            s["frac_under_20ms"] = round(
+                sum(1 for x in lat if x < 20.0) / max(len(lat), 1), 3
+            )
+            rows.append(s)
+    emit(rows, csv_path)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

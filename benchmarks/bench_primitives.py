@@ -1,0 +1,83 @@
+"""Primitive thread-scalability (paper Fig. 15): throughput of local-action,
+send-receive, and detach-merge under concurrent threads while a background
+thread performs empty checkpoints to advance versions.
+
+CPython/GIL + 1-core caveat recorded in EXPERIMENTS.md: absolute numbers are
+bounded by the interpreter; the claim preserved is that the epoch-protected
+action path adds no *coordination collapse* as threads increase (the biased
+reader fast path touches only its stripe).
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.core import LocalCluster
+from repro.services.counter import CounterStateObject as CounterSO
+
+from .common import emit
+
+
+def _throughput(so, mode: str, n_threads: int, dur_s: float = 0.5):
+    stop = threading.Event()
+    counts = [0] * n_threads
+
+    def worker(idx: int):
+        hdr = None
+        while not stop.is_set():
+            if mode == "local-action":
+                if so.StartAction(None):
+                    so.EndAction()
+            elif mode == "send-receive":
+                if so.StartAction(hdr):
+                    hdr = so.EndAction()
+            else:  # detach-merge
+                if so.StartAction(hdr):
+                    t = so.Detach()
+                    if so.Merge(t):
+                        hdr = so.EndAction()
+            counts[idx] += 1
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n_threads)]
+    # background checkpointer advancing versions (paper's setup)
+    def checkpointer():
+        while not stop.is_set():
+            so.runtime.maybe_persist(force=True)
+            time.sleep(0.005)
+
+    ck = threading.Thread(target=checkpointer)
+    for t in threads:
+        t.start()
+    ck.start()
+    time.sleep(dur_s)
+    stop.set()
+    for t in threads:
+        t.join()
+    ck.join()
+    return sum(counts) / dur_s
+
+
+def run(quick: bool = True, csv_path=None):
+    rows = []
+    for mode in ("local-action", "send-receive", "detach-merge"):
+        for n_threads in (1, 2, 4):
+            with tempfile.TemporaryDirectory() as td:
+                cluster = LocalCluster(Path(td), group_commit_interval=99,
+                                       refresh_interval=None)
+                so = cluster.add("so", lambda: CounterSO(Path(td) / "so"))
+                try:
+                    thr = _throughput(so, mode, n_threads)
+                    rows.append({
+                        "name": f"primitives/{mode}/threads={n_threads}",
+                        "ops_per_s": round(thr),
+                    })
+                finally:
+                    cluster.shutdown()
+    emit(rows, csv_path)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

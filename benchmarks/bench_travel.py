@@ -1,0 +1,84 @@
+"""TravelReservations (paper Fig. 9): end-to-end workflow latency vs the
+number of services, speculative vs synchronous-persistence baseline, plus a
+throughput-scaling sweep.
+
+Baseline simulates Temporal/Beldi/Boki-class systems by disabling
+speculation (WorkflowEngine(speculative=False)): the same number of
+synchronous persists current durable-execution engines pay (paper §6.1).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import LocalCluster
+from repro.services import SpeculativeKVStore, WorkflowEngine
+
+from .common import emit, summarize, timer
+
+GC = 0.010  # paper's 10 ms group commit
+
+
+def _setup(root: Path, n_services: int, speculative: bool):
+    cluster = LocalCluster(root, group_commit_interval=GC)
+    kvs = []
+    for i in range(n_services):
+        kv = cluster.add(
+            f"svc{i}", (lambda i=i: SpeculativeKVStore(root / f"kv{i}"))
+        )
+        kv.stock("item", 10**9)
+        kvs.append(kv)
+    wf = cluster.add(
+        "wf", lambda: WorkflowEngine(root / "wf", speculative=speculative)
+    )
+    return cluster, wf, kvs
+
+
+def _run_workflows(wf, kvs, n: int, lat_ms):
+    for i in range(n):
+        wf_id = f"wf{i}"
+        steps = [
+            (lambda hdr, kv=kv, w=wf_id: kv.try_reserve("item", w, hdr)) for kv in kvs
+        ]
+        with timer(lat_ms):
+            out = wf.run_workflow(wf_id, steps)
+            assert out is not None
+
+
+def run(quick: bool = True, csv_path=None):
+    rows = []
+    n_wf = 15 if quick else 60
+    for n_services in (1, 2, 3, 4, 5):
+        for spec in (True, False):
+            with tempfile.TemporaryDirectory() as td:
+                cluster, wf, kvs = _setup(Path(td), n_services, spec)
+                try:
+                    lat = []
+                    _run_workflows(wf, kvs, n_wf, lat)
+                    tag = "dse" if spec else "baseline"
+                    rows.append(summarize(f"travel/{tag}/services={n_services}", lat))
+                finally:
+                    cluster.shutdown()
+    # throughput scaling at 3 services (paper Fig. 9 right)
+    for spec in (True, False):
+        with tempfile.TemporaryDirectory() as td:
+            cluster, wf, kvs = _setup(Path(td), 3, spec)
+            try:
+                t0 = time.perf_counter()
+                lat = []
+                _run_workflows(wf, kvs, n_wf, lat)
+                dt = time.perf_counter() - t0
+                tag = "dse" if spec else "baseline"
+                rows.append({
+                    "name": f"travel/{tag}/throughput",
+                    "workflows_per_s": round(n_wf / dt, 1),
+                })
+            finally:
+                cluster.shutdown()
+    emit(rows, csv_path)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

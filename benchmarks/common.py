@@ -1,0 +1,46 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import statistics
+import time
+from contextlib import contextmanager
+from typing import Dict, List
+
+
+def pctl(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    k = min(len(xs) - 1, max(0, int(round(p / 100 * (len(xs) - 1)))))
+    return xs[k]
+
+
+def summarize(name: str, xs_ms: List[float]) -> Dict[str, float]:
+    return {
+        "name": name,
+        "n": len(xs_ms),
+        "mean_ms": statistics.fmean(xs_ms) if xs_ms else float("nan"),
+        "p50_ms": pctl(xs_ms, 50),
+        "p95_ms": pctl(xs_ms, 95),
+    }
+
+
+@contextmanager
+def timer(out: List[float]):
+    t0 = time.perf_counter()
+    yield
+    out.append((time.perf_counter() - t0) * 1e3)
+
+
+def emit(rows: List[Dict], csv_path=None) -> None:
+    lines = []
+    for r in rows:
+        for k, v in r.items():
+            if k == "name":
+                continue
+            lines.append(f"{r['name']},{k},{v}")
+    text = "\n".join(lines)
+    print(text)
+    if csv_path:
+        with open(csv_path, "a") as f:
+            f.write(text + "\n")

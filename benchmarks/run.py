@@ -1,0 +1,54 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+Emits ``name,metric,value`` CSV lines (and appends to results/bench.csv).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+SUITES = [
+    ("travel", "bench_travel", "paper Fig. 9"),
+    ("event", "bench_event", "paper Fig. 10"),
+    ("2pc", "bench_2pc", "paper Fig. 11"),
+    ("recovery", "bench_recovery", "paper Figs. 12/13"),
+    ("instrumentation", "bench_instrumentation", "paper Fig. 14"),
+    ("primitives", "bench_primitives", "paper Fig. 15"),
+    ("training", "bench_training_dse", "beyond-paper: DSE training loop"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="longer runs")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--csv", default="results/bench.csv")
+    args = ap.parse_args()
+
+    csv_path = Path(args.csv)
+    csv_path.parent.mkdir(parents=True, exist_ok=True)
+
+    import importlib
+
+    failures = 0
+    for name, module, figure in SUITES:
+        if args.only and args.only != name:
+            continue
+        print(f"=== {name} ({figure}) ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{module}")
+            mod.run(quick=not args.full, csv_path=str(csv_path))
+        except Exception as e:  # keep going; report at the end
+            failures += 1
+            print(f"FAILED {name}: {e!r}", flush=True)
+        print(f"--- {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

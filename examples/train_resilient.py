@@ -1,0 +1,54 @@
+"""End-to-end resilient training driver (the TPU-fleet instantiation of
+durable execution): trains a reduced-config model for N steps with async
+speculative checkpointing, kills the trainer mid-run, and verifies the
+final parameters are BIT-IDENTICAL to a failure-free run.
+
+Run:  PYTHONPATH=src python examples/train_resilient.py [--arch gemma-2b] [--steps 12]
+(any of the 10 assigned archs works via --arch; reduced configs on CPU)
+"""
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.train import run_resilient_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--kill-at", type=int, default=None)
+    ap.add_argument("--delta-codec", action="store_true")
+    args = ap.parse_args()
+    kill_at = args.kill_at if args.kill_at is not None else args.steps // 2
+
+    cfg = get_config(args.arch, smoke=True)
+    print(f"arch={cfg.name} (reduced config, family={cfg.family}), "
+          f"steps={args.steps}, trainer killed after step {kill_at}")
+
+    with tempfile.TemporaryDirectory() as td:
+        base = run_resilient_training(Path(td) / "base", cfg, steps=args.steps)
+        inj = run_resilient_training(
+            Path(td) / "inj", cfg, steps=args.steps,
+            kill_trainer_at=kill_at, use_delta_codec=args.delta_codec,
+        )
+
+    print(f"failure-free : digest={base.params_digest} "
+          f"losses[{len(base.external_metrics)}]")
+    print(f"with failure : digest={inj.params_digest} "
+          f"losses[{len(inj.external_metrics)}] rollbacks={inj.rollbacks} "
+          f"ckpt_bytes={inj.checkpoint_bytes}")
+    same = base.params_digest == inj.params_digest
+    print(f"bit-identical parameters after rollback recovery: {same}")
+    losses = [l for _, l in inj.external_metrics]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} (externally visible "
+          f"metrics saw every step exactly once)")
+    assert same
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .hlo import collective_wire_bytes, parse_collectives
+from .roofline import model_flops, roofline_terms
+
+__all__ = ["collective_wire_bytes", "parse_collectives", "model_flops", "roofline_terms"]

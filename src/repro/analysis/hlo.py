@@ -1,0 +1,98 @@
+"""Collective extraction from post-SPMD optimized HLO text.
+
+``cost_analysis`` has no collective line item, so we parse
+``compiled.as_text()`` (the per-device program after the SPMD partitioner)
+and sum per-chip *wire* bytes for every collective op, using ring-algorithm
+volume factors:
+
+  all-gather(result R, groups of n):      R * (n-1)/n          sent per chip
+  reduce-scatter(result R, groups of n):  R * (n-1)            (input = R*n)
+  all-reduce(result R, groups of n):      2 * R * (n-1)/n      (RS + AG)
+  all-to-all(result R, groups of n):      R * (n-1)/n
+  collective-permute(result R):           R
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)  # e.g. replica_groups=[32,16]<=[512]...
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # unknown: conservative minimum
+
+
+def parse_collectives(hlo_text: str) -> List[Tuple[str, int, int]]:
+    """Returns [(op_kind, result_bytes, group_size)] for each collective.
+    '-done' ops are skipped (the '-start' carries the shape)."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out.append((kind, _shape_bytes(shape_str), _group_size(line)))
+    return out
+
+
+def collective_wire_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-chip wire bytes, total and per op kind."""
+    per_kind: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for kind, rbytes, n in parse_collectives(hlo_text):
+        if n <= 1:
+            continue
+        if kind == "all-gather":
+            b = rbytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            b = rbytes * (n - 1)
+        elif kind == "all-reduce":
+            b = 2 * rbytes * (n - 1) / n
+        elif kind == "all-to-all":
+            b = rbytes * (n - 1) / n
+        else:  # collective-permute
+            b = float(rbytes)
+        per_kind[kind] += b
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    out = {"total": total}
+    for k, v in per_kind.items():
+        out[k] = v
+        out[f"n_{k}"] = counts[k]
+    return out

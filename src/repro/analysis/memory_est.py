@@ -1,0 +1,93 @@
+"""Analytic per-chip HBM estimate for the dry-run.
+
+The CPU backend's ``memory_analysis()`` lacks buffer liveness (temp bytes
+approximately equal total bytes accessed), so the fits-in-HBM proof uses an
+analytic model over the *sharded* descriptor trees — exact for params /
+optimizer / caches (they are declared trees with resolved PartitionSpecs),
+estimated for activations:
+
+  train  : params + grads + 2x fp32 moments + L x (saved layer input) [remat]
+           + fp32 logits(+grad) working set
+  prefill: params + ~4 live layer intermediates + last-token logits
+  decode : params + KV/state cache + O(B*D) working set
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from ..launch.mesh import TPU_V5E
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.params import PDesc, is_desc, resolve_specs
+import jax
+
+
+def _shard_factor(spec, sizes: Dict[str, int]) -> int:
+    f = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            f *= sizes.get(a, 1)
+    return f
+
+
+def sharded_tree_bytes(descs, rules, sizes, elt_bytes: int) -> int:
+    from jax.sharding import PartitionSpec
+
+    specs = resolve_specs(descs, rules, sizes)
+    d_leaves = jax.tree_util.tree_leaves(descs, is_leaf=is_desc)
+    s_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec)
+    )
+    assert len(d_leaves) == len(s_leaves)
+    total = 0
+    for d, s in zip(d_leaves, s_leaves):
+        n = int(np.prod(d.shape)) if d.shape else 1
+        total += n * elt_bytes // _shard_factor(s, sizes)
+    return total
+
+
+def estimate_hbm(cfg: ModelConfig, shape: ShapeConfig, rules, sizes, remat: str) -> Dict:
+    from ..models import cache_descs, param_descs
+
+    batch_axes = [a for a in ("pod", "data") if a in sizes]
+    b_shards = int(np.prod([sizes[a] for a in batch_axes])) or 1
+    m = sizes.get("model", 1)
+    b_loc = max(shape.global_batch // b_shards, 1)
+    d = cfg.d_model
+    v_loc = cfg.vocab_padded // m if cfg.vocab_padded % m == 0 else cfg.vocab_padded
+
+    pdescs = param_descs(cfg)
+    params_b = sharded_tree_bytes(pdescs, rules, sizes, 2)
+    out: Dict[str, float] = {"params": params_b}
+
+    if shape.kind == "train":
+        from ..models.tuning import get_tuning
+
+        tun = get_tuning()
+        out["optimizer_fp32"] = sharded_tree_bytes(pdescs, rules, sizes, 4) * 2
+        out["grads"] = params_b
+        saved_per_layer = b_loc * shape.seq_len * d * 2  # bf16 layer input
+        n_saved = cfg.num_layers + cfg.encoder_layers
+        mult = {"full": 1.0, "dots": 4.0, "none": 10.0}[remat]
+        out["activations_saved"] = saved_per_layer * n_saved * mult / tun.microbatch
+        s_eff = min(shape.seq_len, tun.loss_chunk) if tun.loss_chunk else shape.seq_len
+        out["logits_ws_fp32"] = 2 * (b_loc // tun.microbatch) * s_eff * v_loc * 4
+        out["layer_working_set"] = 4 * saved_per_layer / tun.microbatch
+    elif shape.kind == "prefill":
+        live = b_loc * shape.seq_len * d * 2
+        out["layer_working_set"] = 6 * live
+        out["logits"] = b_loc * v_loc * 4
+    else:  # decode
+        cdescs = cache_descs(cfg, batch=shape.global_batch, max_len=shape.seq_len)
+        out["kv_cache"] = sharded_tree_bytes(cdescs, rules, sizes, 2) * 2  # in+out
+        out["layer_working_set"] = 8 * b_loc * d * 2
+        out["logits"] = b_loc * v_loc * 4
+
+    out["total"] = float(sum(v for k, v in out.items()))
+    out["hbm_fraction"] = out["total"] / TPU_V5E["hbm_bytes"]
+    out["fits_16g"] = bool(out["total"] <= TPU_V5E["hbm_bytes"])
+    return out

@@ -1,0 +1,104 @@
+"""Measure the attention-quadratic share of the memory roofline term.
+
+Method: HLO bytes at fixed token count T decompose as
+    bytes(S, B) = linear(T) + quad * S        (attention S^2 per sequence =
+                                               S * T total)
+so compiling probes at (S, B) and (S/2, 2B) — same tokens, same parameter
+traffic — isolates the quadratic part:
+    quad_total = 2 * (bytes(S, B) - bytes(S/2, 2B))
+
+The flash-attention Pallas kernel (kernels/flash_attention.py, validated
+against ref.py) keeps all S^2 intermediates in VMEM tiles; per (batch,head)
+the K/V working set at these shapes (<= 16 MB) fits VMEM, so its HBM
+traffic is linear and the adjusted memory term is (total - quad). This is
+the cost model for the TPU build, where attn_impl="pallas" replaces the XLA
+S^2 path; the CPU dry-run cannot compile Mosaic kernels (interpret-only),
+hence the measured-decomposition approach.
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.quad_probe --arch gemma_2b --shape train_4k
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses as dc
+import json
+
+from repro.analysis.roofline import roofline_terms
+from repro.configs import get_config
+from repro.launch.dryrun import _compile_cell, _cost_and_collectives, extrapolate, scaled_pair
+from repro.launch.mesh import TPU_V5E, make_production_mesh
+from repro.models import shape_by_name
+from repro.models.scan_utils import scan_unroll
+
+
+def probe_cost(cfg, shape, mesh, remat="full"):
+    small, large, extra = scaled_pair(cfg)
+    with scan_unroll():
+        cs, _ = _compile_cell(small, shape, mesh, remat)
+        cl, _ = _compile_cell(large, shape, mesh, remat)
+    cost_s, coll_s = _cost_and_collectives(cs)
+    cost_l, coll_l = _cost_and_collectives(cl)
+    return extrapolate(cost_s, cost_l, extra), extrapolate(coll_s, coll_l, extra)
+
+
+def quad_decompose(arch: str, shape_name: str, remat: str = "full"):
+    mesh = make_production_mesh()
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    half = dc.replace(shape, seq_len=shape.seq_len // 2,
+                      global_batch=shape.global_batch * 2)
+    cost_full, coll_full = probe_cost(cfg, shape, mesh, remat)
+    cost_half, _ = probe_cost(cfg, half, mesh, remat)
+
+    b_full = cost_full["bytes accessed"]
+    b_half = cost_half["bytes accessed"]
+    quad = max(0.0, 2.0 * (b_full - b_half))
+    f_full = cost_full["flops"]
+    f_half = cost_half["flops"]
+    quad_flops = max(0.0, 2.0 * (f_full - f_half))
+
+    adj_cost = dict(cost_full)
+    adj_cost["bytes accessed"] = b_full - quad
+    base = roofline_terms(cost_full, coll_full, cfg, shape, mesh.devices.size)
+    adj = roofline_terms(adj_cost, coll_full, cfg, shape, mesh.devices.size)
+    return {
+        "arch": arch, "shape": shape_name,
+        "bytes_per_chip": b_full,
+        "quad_bytes_per_chip": quad,
+        "quad_fraction": quad / b_full if b_full else 0.0,
+        "quad_flops_fraction": quad_flops / f_full if f_full else 0.0,
+        "memory_s_xla": base["memory_s"],
+        "memory_s_flash_adjusted": adj["memory_s"],
+        "roofline_fraction_xla": base["roofline_fraction"],
+        "roofline_fraction_flash_adjusted": adj["roofline_fraction"],
+        "dominant_after": adj["dominant"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--constrain-activations", action="store_true")
+    args = ap.parse_args()
+    from repro.models.tuning import tuning
+
+    with tuning(
+        loss_chunk=args.loss_chunk,
+        microbatch=args.microbatch,
+        constrain_activations=args.constrain_activations,
+    ):
+        out = quad_decompose(args.arch, args.shape, args.remat)
+    print(json.dumps({k: (round(v, 6) if isinstance(v, float) else v)
+                      for k, v in out.items()}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""LocalCluster — in-process deployment + failure-injection harness.
+
+Plays the role Kubernetes plays in the paper's deployment (§5.1): it hosts
+StateObject incarnations, drives the background protocol (``Refresh``),
+detects "down" services (here: explicit ``kill``), replaces them with fresh
+incarnations, and reconnects them to the coordinator — which is exactly the
+signal libDSE uses to trigger cluster-level recovery.
+
+Transport note (DESIGN.md §2): services in this repo call each other
+in-process, passing :class:`~repro.core.ids.Header` objects where the paper
+passes gRPC HTTP headers. The protocol is transport-agnostic; ``call`` below
+provides the retry-on-delay semantics a gRPC interceptor would.
+"""
+from __future__ import annotations
+
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Callable, Dict, Iterator, List, Optional
+
+from .coordinator import Coordinator
+from .runtime import CrashedError, DSEConfig
+from .sthread import DelayMessage
+from .state_object import StateObject
+
+
+class LocalCluster:
+    def __init__(
+        self,
+        root: Path,
+        *,
+        group_commit_interval: float = 0.010,
+        refresh_interval: Optional[float] = 0.002,
+        strict_commit_ordering: bool = False,
+        persist_jitter: float = 0.0,
+        barrier_poll_interval: float = 0.002,
+    ) -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.coordinator = Coordinator(self.root / "coordinator.jsonl")
+        self._defaults = dict(
+            group_commit_interval=group_commit_interval,
+            strict_commit_ordering=strict_commit_ordering,
+            persist_jitter=persist_jitter,
+            barrier_poll_interval=barrier_poll_interval,
+        )
+        self._lock = threading.RLock()
+        self._sos: Dict[str, StateObject] = {}
+        self._factories: Dict[str, Callable[[], StateObject]] = {}
+        self._overrides: Dict[str, dict] = {}
+        self._stop = threading.Event()
+        self._refresher: Optional[threading.Thread] = None
+        if refresh_interval is not None:
+            self._refresher = threading.Thread(
+                target=self._refresh_loop, args=(refresh_interval,), daemon=True
+            )
+            self._refresher.start()
+
+    # ------------------------------------------------------------------ #
+    # membership                                                         #
+    # ------------------------------------------------------------------ #
+    def add(self, so_id: str, factory: Callable[[], StateObject], **overrides) -> StateObject:
+        """Deploy a StateObject; ``factory`` is reused to build replacement
+        incarnations after ``kill``."""
+        so = factory()
+        cfg = DSEConfig(
+            so_id=so_id,
+            coordinator=self.coordinator,
+            **{**self._defaults, **overrides},
+        )
+        so.Connect(cfg)
+        with self._lock:
+            self._sos[so_id] = so
+            self._factories[so_id] = factory
+            self._overrides[so_id] = overrides
+        return so
+
+    def get(self, so_id: str) -> StateObject:
+        with self._lock:
+            return self._sos[so_id]
+
+    def members(self) -> List[str]:
+        with self._lock:
+            return list(self._sos.keys())
+
+    # ------------------------------------------------------------------ #
+    # failure injection                                                  #
+    # ------------------------------------------------------------------ #
+    def kill(self, so_id: str, *, restart: bool = True) -> Optional[StateObject]:
+        """Crash the current incarnation (losing all volatile state) and, by
+        default, immediately restart it — which triggers rollback recovery
+        when the new incarnation re-Connects."""
+        with self._lock:
+            old = self._sos[so_id]
+        old.runtime.mark_dead()
+        crash = getattr(old, "on_crash", None)
+        if callable(crash):
+            crash()  # drop in-memory tiers / poison the store
+        if not restart:
+            with self._lock:
+                self._sos.pop(so_id, None)
+            return None
+        return self._restart(so_id)
+
+    def _restart(self, so_id: str) -> StateObject:
+        so = self._factories[so_id]()
+        cfg = DSEConfig(
+            so_id=so_id,
+            coordinator=self.coordinator,
+            **{**self._defaults, **self._overrides.get(so_id, {})},
+        )
+        so.Connect(cfg)
+        with self._lock:
+            self._sos[so_id] = so
+        return so
+
+    def restart_coordinator(self) -> None:
+        """Simulate coordinator failure + recovery: a new coordinator replays
+        the durable log and collects fragments from every participant."""
+        with self._lock:
+            old = self.coordinator
+            self.coordinator = Coordinator(self.root / "coordinator.jsonl")
+            for so in self._sos.values():
+                so.runtime.coordinator = self.coordinator
+        old.close()
+
+    # ------------------------------------------------------------------ #
+    # protocol driving                                                   #
+    # ------------------------------------------------------------------ #
+    def refresh_all(self) -> None:
+        """One synchronous Refresh round (deterministic driving for tests)."""
+        with self._lock:
+            sos = list(self._sos.values())
+        for so in sos:
+            try:
+                so.Refresh()
+            except CrashedError:
+                pass
+
+    def _refresh_loop(self, interval: float) -> None:
+        while not self._stop.is_set():
+            self.refresh_all()
+            self._stop.wait(interval)
+
+    # ------------------------------------------------------------------ #
+    # transport helper                                                   #
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def call(fn: Callable, *args, retries: int = 200, backoff: float = 0.002, **kwargs):
+        """Invoke a service handler with retry-on-delay semantics (what the
+        gRPC integration layer does in the paper when a message arrives from
+        a future failure epoch, Def 4.3)."""
+        for _ in range(retries):
+            try:
+                return fn(*args, **kwargs)
+            except DelayMessage:
+                time.sleep(backoff)
+        raise TimeoutError("message delayed past retry budget")
+
+    # ------------------------------------------------------------------ #
+    # lifecycle                                                          #
+    # ------------------------------------------------------------------ #
+    def shutdown(self) -> None:
+        self._stop.set()
+        if self._refresher is not None:
+            self._refresher.join(timeout=2.0)
+        # Persist outstanding state so clean shutdown is not a failure
+        # (paper §5.1: no explicit disconnect is needed if state is durable),
+        # then DRAIN the async persist IO so directory teardown cannot race
+        # in-flight writes.
+        with self._lock:
+            sos = list(self._sos.values())
+        labels = []
+        for so in sos:
+            try:
+                labels.append((so, so.runtime.maybe_persist(force=True)))
+            except Exception:
+                labels.append((so, None))
+        deadline = time.time() + 3.0
+        for so, label in labels:
+            if label is None:
+                continue
+            while time.time() < deadline:
+                try:
+                    if so.runtime.stats()["committed"] >= label:
+                        break
+                except Exception:
+                    break
+                time.sleep(0.002)
+        self.coordinator.close()
+
+    def wipe(self) -> None:
+        shutil.rmtree(self.root, ignore_errors=True)
+
+    def __enter__(self) -> "LocalCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

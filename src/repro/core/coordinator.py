@@ -1,0 +1,276 @@
+"""Stateless libDSE coordinator (paper §4.3).
+
+The coordinator's *point of truth is the collective persisted state of the
+participants*: dependency-graph fragments are persisted inside each
+StateObject (via the ``metadata`` argument of ``Persist``) and reported
+asynchronously, so the coordinator holds only a (possibly stale) **view**
+of the real graph. Nothing is persisted by the coordinator on the
+failure-free path — its log records only *membership changes* and
+*rollback decisions* (which must be durable before release, as they embody
+cluster consensus).
+
+Soundness of the stale view (paper §4.3, Finding Boundaries): the
+persistent part of the graph is immutable — future operations add vertices
+but never change past dependencies — so any recoverable boundary found on
+the coordinator's present view remains recoverable on every later view.
+Rollback targets computed on the stale view are *conservative*: a persisted
+vertex the coordinator has not yet seen is above its owner's target and is
+therefore rolled back (paper §5.3 acknowledges this over-rollback; the
+StateObject-side skip mitigation in ``DSERuntime._apply_decision`` recovers
+the common case).
+
+Coordinator recovery (paper §4.3): a restarted coordinator replays the log
+to recover membership + past decisions, then asks every participant to
+resend its locally persisted graph fragments; it refuses to answer boundary
+queries (returns ``None``) until every participant has responded, which
+guarantees a view at least as fresh as the pre-failure one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .graph import DependencyGraph
+from .ids import PersistReport, RollbackDecision, Vertex, vertex_rolled_back
+
+
+@dataclass
+class ConnectResponse:
+    world: int
+    decisions: List[RollbackDecision]
+    boundary: Optional[Dict[str, int]]
+    #: version the connecting incarnation must Restore to; None => fresh start
+    restore_to: Optional[int] = None
+
+
+@dataclass
+class PollResponse:
+    decisions: List[RollbackDecision] = field(default_factory=list)
+    boundary: Optional[Dict[str, int]] = None
+    resend_fragments: bool = False
+
+
+class CoordinatorLog:
+    """Synchronous JSONL append log — the coordinator's only durable state.
+
+    Backed here by a local file + fsync; in production this would be a Raft
+    group or reliable cloud storage (paper Fig. 8) — the interface is the
+    same: ordered, durable appends and full replay.
+    """
+
+    def __init__(self, path: Path) -> None:
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._fh = open(self.path, "a+b")
+
+    def append(self, record: dict) -> None:
+        data = json.dumps(record).encode() + b"\n"
+        self._fh.write(data)
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+
+    def replay(self) -> List[dict]:
+        out: List[dict] = []
+        with open(self.path, "rb") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(json.loads(line.decode()))
+                except Exception:
+                    break  # torn tail write: ignore the partial record
+        return out
+
+    def close(self) -> None:
+        try:
+            self._fh.close()
+        except Exception:
+            pass
+
+
+class Coordinator:
+    """Embodies cluster consensus as the (singleton) leader (paper §4.2)."""
+
+    def __init__(self, log_path: Path, recovery_timeout: float = 30.0) -> None:
+        self._lock = threading.RLock()
+        self._recovered_cv = threading.Condition(self._lock)
+        self._log = CoordinatorLog(log_path)
+        self._graph = DependencyGraph()
+        self._members: Set[str] = set()
+        self._decisions: List[RollbackDecision] = []
+        self._fsn = 0
+        self._recovery_timeout = recovery_timeout
+
+        # Replay the durable log: membership + decisions.
+        for rec in self._log.replay():
+            if rec.get("type") == "member":
+                self._members.add(rec["so_id"])
+            elif rec.get("type") == "decision":
+                d = RollbackDecision.from_json(rec)
+                self._decisions.append(d)
+                self._fsn = max(self._fsn, d.fsn)
+        # If members existed, this is a restarted coordinator: the graph view
+        # must be rebuilt from participants before boundaries can be served.
+        self._awaiting: Set[str] = set(self._members)
+        for so in self._members:
+            self._graph.add_member(so)
+
+        self._dirty = True
+        self._boundary_cache: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------ #
+    # helpers                                                            #
+    # ------------------------------------------------------------------ #
+    def _ingest(self, reports: Iterable[PersistReport]) -> None:
+        """Incorporate persisted-vertex reports, dropping any vertex an
+        existing decision has already invalidated (stale blobs / in-flight
+        reports from a pre-rollback incarnation)."""
+        for r in reports:
+            if vertex_rolled_back(r.vertex, self._decisions):
+                continue
+            deps = [(d.so_id, d.version) for d in r.deps if d.so_id != r.vertex.so_id]
+            self._graph.report_persistent(r.vertex.so_id, r.vertex.version, deps)
+            self._dirty = True
+
+    def _boundary(self) -> Optional[Dict[str, int]]:
+        """Current recoverable boundary, or None while the view is incomplete
+        (coordinator recovery in progress)."""
+        if self._awaiting:
+            return None
+        if self._dirty:
+            self._boundary_cache = self._graph.recoverable_boundary()
+            # Vertices inside the boundary are immortal: prune their dep
+            # lists, keeping only the floor watermark (memory bound).
+            for so, b in self._boundary_cache.items():
+                self._graph.prune(so, b)
+            self._dirty = False
+        return dict(self._boundary_cache)
+
+    def _wait_recovered(self, exclude: Set[str]) -> None:
+        deadline = None
+        import time
+
+        deadline = time.monotonic() + self._recovery_timeout
+        while self._awaiting - exclude:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"coordinator recovery stalled; awaiting fragments from "
+                    f"{sorted(self._awaiting - exclude)}"
+                )
+            self._recovered_cv.wait(timeout=min(remaining, 0.05))
+
+    # ------------------------------------------------------------------ #
+    # participant API                                                    #
+    # ------------------------------------------------------------------ #
+    def connect(self, so_id: str, fragments: Sequence[PersistReport]) -> ConnectResponse:
+        """Register ``so_id`` as the legitimate incarnation (paper §5.1).
+
+        A connect from an already-registered member indicates a failure and
+        triggers the Recovery Protocol: compute the consistent surviving
+        prefix, durably log the decision, and release it to the cluster.
+        """
+        with self._lock:
+            self._ingest(fragments)
+            if so_id in self._members:
+                # -- failure path -------------------------------------------------
+                self._awaiting.discard(so_id)  # its fragments just arrived in full
+                self._recovered_cv.notify_all()
+                # Rollback targets on an incomplete view would erase innocent
+                # members; wait until every other participant has resent.
+                self._wait_recovered(exclude={so_id})
+
+                valid = [
+                    r.vertex.version
+                    for r in fragments
+                    if r.vertex.so_id == so_id
+                    and not vertex_rolled_back(r.vertex, self._decisions)
+                ]
+                surviving = max(valid, default=-1)
+                # Remove the failed SO's lost vertices, then find the greatest
+                # closure of what remains (iteratively removing dangling refs).
+                self._graph.truncate(so_id, surviving)
+                targets = self._graph.rollback_targets(so_id, surviving)
+                fsn = self._fsn + 1
+                decision = RollbackDecision(fsn=fsn, failed=so_id, targets=targets)
+                # Consensus step: the decision must be durable before any
+                # participant can observe it (paper §4.3, Orchestrating Rollback).
+                self._log.append({"type": "decision", **decision.to_json()})
+                self._fsn = fsn
+                self._decisions.append(decision)
+                for so, t in targets.items():
+                    self._graph.truncate(so, t)
+                self._dirty = True
+                restore_to = targets.get(so_id, -1)
+                return ConnectResponse(
+                    world=self._fsn,
+                    decisions=list(self._decisions),
+                    boundary=self._boundary(),
+                    restore_to=(restore_to if restore_to >= 0 else None),
+                )
+
+            # -- first connect ---------------------------------------------------
+            self._log.append({"type": "member", "so_id": so_id})
+            self._members.add(so_id)
+            self._graph.add_member(so_id)
+            valid = [
+                r.vertex.version
+                for r in fragments
+                if r.vertex.so_id == so_id
+                and not vertex_rolled_back(r.vertex, self._decisions)
+            ]
+            # Adoption: an unknown member with durable state (e.g. a fresh
+            # coordinator log) resumes from its own latest valid version.
+            restore_to = max(valid) if valid else None
+            return ConnectResponse(
+                world=self._fsn,
+                decisions=list(self._decisions),
+                boundary=self._boundary(),
+                restore_to=restore_to,
+            )
+
+    def report(self, so_id: str, reports: Sequence[PersistReport]) -> None:
+        with self._lock:
+            self._ingest(reports)
+
+    def receive_fragments(self, so_id: str, fragments: Sequence[PersistReport]) -> None:
+        """Full fragment resend during coordinator recovery."""
+        with self._lock:
+            self._ingest(fragments)
+            self._awaiting.discard(so_id)
+            self._recovered_cv.notify_all()
+            self._dirty = True
+
+    def poll(self, so_id: str, known_world: int) -> PollResponse:
+        with self._lock:
+            return PollResponse(
+                decisions=[d for d in self._decisions if d.fsn > known_world],
+                boundary=self._boundary(),
+                resend_fragments=so_id in self._awaiting,
+            )
+
+    # ------------------------------------------------------------------ #
+    # introspection                                                      #
+    # ------------------------------------------------------------------ #
+    def current_boundary(self) -> Optional[Dict[str, int]]:
+        with self._lock:
+            return self._boundary()
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            snap = self._graph.snapshot()
+            return {
+                "members": sorted(self._members),
+                "fsn": self._fsn,
+                "decisions": len(self._decisions),
+                "graph_vertices": sum(len(per) for per in snap.values()),
+                "awaiting": sorted(self._awaiting),
+            }
+
+    def close(self) -> None:
+        self._log.close()

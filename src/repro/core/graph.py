@@ -1,0 +1,159 @@
+"""Recovery dependency graph and the boundary / rollback fixpoints (paper §4.2–4.3).
+
+The graph is stored in *watermark* form: for each StateObject we keep the
+sorted list of persisted version labels and, per label, the dependency list
+``[(dep_so, dep_version), ...]``. Prefix-recoverability semantics mean a
+dependency on version ``n`` of ``B`` is satisfied by any recovered watermark
+``>= n`` of ``B`` — precedence edges (paper: "implicitly by precedence") are
+therefore implicit, and persisted-label *gaps* (from version relabeling, see
+DESIGN.md §2) are harmless.
+
+Two closely-related fixpoints are computed here:
+
+* ``recoverable_boundary`` — the maximal closure of durable vertices; the
+  cut behind which results are non-speculative (Boundary Protocol).
+* ``rollback_targets`` — identical computation with the failed SO's durable
+  watermark truncated to what actually survived; the consistent prefix every
+  participant restores to (Recovery Protocol).
+
+Because the commit ordering rule guarantees dep.version <= vertex.version,
+every global watermark set {v : v.version <= t} is a closure, so the
+fixpoint always terminates at a non-degenerate cut (no domino effect).
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+
+
+DepList = List[Tuple[str, int]]  # [(dep_so_id, dep_version_watermark)]
+
+
+class DependencyGraph:
+    """Coordinator-side (possibly stale) view of the persisted dependency graph.
+
+    Thread-safe; all mutation happens under one lock (the coordinator calls
+    are already serialized, but services may query concurrently).
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        # so_id -> {version -> deps}
+        self._deps: Dict[str, Dict[int, DepList]] = {}
+        # so_id -> sorted list of persisted version labels
+        self._labels: Dict[str, List[int]] = {}
+
+    # -- mutation --------------------------------------------------------------
+    def add_member(self, so_id: str) -> None:
+        with self._lock:
+            self._deps.setdefault(so_id, {})
+            self._labels.setdefault(so_id, [])
+
+    def remove_member(self, so_id: str) -> None:
+        with self._lock:
+            self._deps.pop(so_id, None)
+            self._labels.pop(so_id, None)
+
+    def report_persistent(self, so_id: str, version: int, deps: Iterable[Tuple[str, int]]) -> None:
+        with self._lock:
+            self.add_member(so_id)
+            if version not in self._deps[so_id]:
+                bisect.insort(self._labels[so_id], version)
+            self._deps[so_id][version] = list(deps)
+
+    def truncate(self, so_id: str, keep_upto: int) -> None:
+        """Drop vertices of ``so_id`` with version > keep_upto (rollback)."""
+        with self._lock:
+            labels = self._labels.get(so_id, [])
+            cut = bisect.bisect_right(labels, keep_upto)
+            for v in labels[cut:]:
+                self._deps[so_id].pop(v, None)
+            self._labels[so_id] = labels[:cut]
+
+    def prune(self, so_id: str, below: int) -> None:
+        """Forget dep lists for versions <= ``below`` (they are inside the
+        boundary forever; keeping only the watermark is sufficient)."""
+        with self._lock:
+            labels = self._labels.get(so_id, [])
+            if not labels:
+                return
+            cut = bisect.bisect_right(labels, below)
+            if cut <= 1:
+                return
+            # keep the highest pruned label as the floor watermark
+            for v in labels[: cut - 1]:
+                self._deps[so_id].pop(v, None)
+                self._deps[so_id].setdefault(labels[cut - 1], [])
+            self._labels[so_id] = labels[cut - 1 :]
+
+    # -- queries ---------------------------------------------------------------
+    def members(self) -> List[str]:
+        with self._lock:
+            return list(self._labels.keys())
+
+    def committed_watermarks(self) -> Dict[str, int]:
+        with self._lock:
+            return {so: (labels[-1] if labels else -1) for so, labels in self._labels.items()}
+
+    def snapshot(self) -> Dict[str, Dict[int, DepList]]:
+        with self._lock:
+            return {so: {v: list(d) for v, d in per.items()} for so, per in self._deps.items()}
+
+    # -- fixpoints ---------------------------------------------------------------
+    def recoverable_boundary(
+        self, committed_override: Optional[Mapping[str, int]] = None
+    ) -> Dict[str, int]:
+        """Greatest closure of durable vertices, as per-SO version watermarks.
+
+        ``committed_override`` truncates specific SOs' durable watermarks
+        (used by the rollback computation for the failed SO's surviving
+        prefix). Returns ``{so_id: watermark}``; a watermark of -1 means
+        "nothing recoverable yet" (version labels start at 0).
+        """
+        with self._lock:
+            bound: Dict[str, int] = {}
+            for so, labels in self._labels.items():
+                b = labels[-1] if labels else -1
+                if committed_override and so in committed_override:
+                    b = min(b, committed_override[so])
+                bound[so] = b
+
+            changed = True
+            while changed:
+                changed = False
+                for so, per_version in self._deps.items():
+                    b = bound.get(so, -1)
+                    for v in sorted(ver for ver in per_version if ver <= b):
+                        for dep_so, dep_version in per_version[v]:
+                            if dep_so == so:
+                                continue  # precedence is implicit
+                            if bound.get(dep_so, -1) < dep_version:
+                                # v (and everything after) cannot be in the
+                                # closure: cut this SO's watermark below v.
+                                bound[so] = v - 1
+                                changed = True
+                                break
+                        if bound[so] < v:
+                            break
+            return bound
+
+    def snap_to_labels(self, watermarks: Mapping[str, int]) -> Dict[str, int]:
+        """Snap each watermark down to the greatest persisted label <= it.
+
+        Restore targets must be loadable versions; -1 means the initial
+        (Connect-time) version 0 snapshot does not exist yet, which cannot
+        happen in practice because Connect persists version 0 synchronously.
+        """
+        with self._lock:
+            out: Dict[str, int] = {}
+            for so, w in watermarks.items():
+                labels = self._labels.get(so, [])
+                i = bisect.bisect_right(labels, w)
+                out[so] = labels[i - 1] if i > 0 else -1
+            return out
+
+    def rollback_targets(self, failed_so: str, surviving: int) -> Dict[str, int]:
+        """Consistent prefix after ``failed_so`` lost every version > ``surviving``."""
+        bound = self.recoverable_boundary({failed_so: surviving})
+        return self.snap_to_labels(bound)

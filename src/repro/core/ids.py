@@ -1,0 +1,153 @@
+"""Vertex / header / decision wire types for the DSE protocol.
+
+A *vertex* on the recovery dependency graph is a recoverable point,
+uniquely identified by (StateObject id, global failure counter ``world``,
+local persistence counter ``version``) — the paper's :math:`A^x_y`.
+
+Message *headers* carry the dependency set of the sending entity. A
+StateObject-originated message carries exactly its current in-progress
+vertex; an sthread-originated message carries the sthread's accumulated
+dependency set (paper §4.2, Instrumentation Protocol).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, Mapping, Optional, Tuple
+
+
+@dataclass(frozen=True, order=True)
+class Vertex:
+    """A recoverable point :math:`A^{world}_{version}` on the dependency graph."""
+
+    so_id: str
+    world: int
+    version: int
+
+    def to_json(self) -> list:
+        return [self.so_id, self.world, self.version]
+
+    @staticmethod
+    def from_json(obj: Iterable) -> "Vertex":
+        so_id, world, version = obj
+        return Vertex(str(so_id), int(world), int(version))
+
+    def __repr__(self) -> str:  # A_y^x notation from the paper
+        return f"{self.so_id}_{self.version}^{self.world}"
+
+
+@dataclass(frozen=True)
+class Header:
+    """Opaque libDSE message header (paper Table 2).
+
+    ``deps`` is the set of vertices the receiver will depend on if it
+    consumes this message. StateObject sends produce a single-vertex set;
+    sthread sends may carry many.
+    """
+
+    deps: FrozenSet[Vertex] = frozenset()
+
+    def encode(self) -> bytes:
+        return json.dumps(sorted(v.to_json() for v in self.deps)).encode()
+
+    @staticmethod
+    def decode(raw: bytes) -> "Header":
+        return Header(frozenset(Vertex.from_json(o) for o in json.loads(raw.decode())))
+
+    def merge(self, other: "Header") -> "Header":
+        return Header(self.deps | other.deps)
+
+    @staticmethod
+    def of(*vertices: Vertex) -> "Header":
+        return Header(frozenset(vertices))
+
+    def max_version_for(self, exclude_so: Optional[str] = None) -> int:
+        """Largest version watermark carried (commit ordering rule input)."""
+        versions = [v.version for v in self.deps if v.so_id != exclude_so]
+        return max(versions, default=-1)
+
+
+@dataclass(frozen=True)
+class RollbackDecision:
+    """A coordinator rollback decision, synchronously persisted (paper §4.3).
+
+    ``fsn``      — failure sequence number; becomes the new ``world``.
+    ``targets``  — per-SO version watermark to restore to (surviving prefix).
+    ``lost``     — per-SO version watermark *above which* vertices are lost
+                   (== targets; kept explicit for skip-rollback checks).
+    ``failed``   — the SO whose failure triggered this decision.
+    """
+
+    fsn: int
+    failed: str
+    targets: Mapping[str, int] = field(default_factory=dict)
+
+    def invalidates(self, v: Vertex) -> bool:
+        """True iff this decision rolled back vertex ``v``."""
+        if v.world >= self.fsn:
+            return False  # v was created after (or by) this recovery
+        target = self.targets.get(v.so_id)
+        if target is None:
+            return False  # SO not a participant of this rollback
+        return v.version > target
+
+    def to_json(self) -> dict:
+        return {"fsn": self.fsn, "failed": self.failed, "targets": dict(self.targets)}
+
+    @staticmethod
+    def from_json(obj: dict) -> "RollbackDecision":
+        return RollbackDecision(
+            fsn=int(obj["fsn"]),
+            failed=str(obj["failed"]),
+            targets={str(k): int(v) for k, v in obj["targets"].items()},
+        )
+
+
+def vertex_rolled_back(v: Vertex, decisions: Iterable[RollbackDecision]) -> bool:
+    """True iff any decision in ``decisions`` invalidates ``v``."""
+    return any(d.invalidates(v) for d in decisions)
+
+
+@dataclass
+class PersistReport:
+    """StateObject → coordinator report: vertex became durable with deps."""
+
+    vertex: Vertex
+    deps: Tuple[Vertex, ...]
+
+    def to_json(self) -> dict:
+        return {"v": self.vertex.to_json(), "deps": [d.to_json() for d in self.deps]}
+
+    @staticmethod
+    def from_json(obj: dict) -> "PersistReport":
+        return PersistReport(
+            vertex=Vertex.from_json(obj["v"]),
+            deps=tuple(Vertex.from_json(d) for d in obj["deps"]),
+        )
+
+
+def encode_metadata(world: int, version: int, deps: Iterable[Vertex], user: bytes = b"") -> bytes:
+    """Serialize the dependency-graph fragment persisted with each version.
+
+    The paper (§4.3, Finding Boundaries) persists graph fragments inside each
+    StateObject via the ``metadata`` argument of ``Persist`` — this is the
+    distributed point of truth that a recovering coordinator reassembles.
+    ``user`` carries service-specific metadata piggybacked on the same blob.
+    """
+    blob = {
+        "world": world,
+        "version": version,
+        "deps": [d.to_json() for d in deps],
+        "user": user.hex(),
+    }
+    return json.dumps(blob).encode()
+
+
+def decode_metadata(raw: bytes) -> Tuple[int, int, Tuple[Vertex, ...], bytes]:
+    obj = json.loads(raw.decode())
+    return (
+        int(obj["world"]),
+        int(obj["version"]),
+        tuple(Vertex.from_json(d) for d in obj["deps"]),
+        bytes.fromhex(obj.get("user", "")),
+    )

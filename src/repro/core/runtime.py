@@ -1,0 +1,442 @@
+"""DSERuntime — per-StateObject speculative execution engine (paper §4, §5.1).
+
+Responsibilities (paper §3): (1) persist / recover / roll back the
+StateObject by invoking developer-supplied methods, (2) instrument message
+headers to establish dependencies, discard rolled-back messages and delay
+cross-epoch messages, (3) protect developer state access via epoch-protected
+actions.
+
+Commit ordering (Def 4.1) is enforced by *version relabeling*: receiving a
+dependency with watermark ``n`` bumps the in-progress version label to
+``max(v_cur, n)`` instead of blocking for local persistence (see DESIGN.md
+§2 for the equivalence argument; labels are monotonic watermarks and
+persisted-label gaps are allowed). ``strict_commit_ordering=True`` restores
+the paper's literal blocking behaviour.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Optional, Set, TYPE_CHECKING
+
+from .ids import (
+    Header,
+    PersistReport,
+    RollbackDecision,
+    Vertex,
+    decode_metadata,
+    encode_metadata,
+)
+from .epoch import EpochRWLock
+from .sthread import DelayMessage, RolledBackError, SThread
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .coordinator import Coordinator
+    from .state_object import StateObject
+
+
+@dataclass
+class DSEConfig:
+    so_id: str
+    coordinator: "Coordinator"
+    group_commit_interval: float = 0.010  # seconds; paper default 10 ms
+    strict_commit_ordering: bool = False
+    # Jitter persists across the fleet so thousands of nodes do not fsync in
+    # lock-step (straggler/burst mitigation; beyond-paper, see DESIGN.md §6).
+    persist_jitter: float = 0.0
+    barrier_poll_interval: float = 0.002
+    user_metadata_fn: Optional[object] = None  # Callable[[], bytes]
+
+
+class CrashedError(Exception):
+    """Raised by a killed incarnation (failure-injection harness)."""
+
+
+class DSERuntime:
+    def __init__(self, so: "StateObject", config: DSEConfig) -> None:
+        self.so = so
+        self.config = config
+        self.so_id = config.so_id
+        self.coordinator = config.coordinator
+
+        self._epoch = EpochRWLock()
+        self._mu = threading.RLock()
+        self._boundary_cond = threading.Condition(self._mu)
+
+        self.world = 0
+        self._v_cur = 1  # version 0 is the Connect-time snapshot
+        self._committed = -1
+        self._dirty = False
+        self._current_deps: Set[Vertex] = set()
+        # deps of persisted-but-not-yet-inside-boundary labels (for the
+        # skip-rollback mitigation, paper §5.3) + local label list.
+        self._dep_log: Dict[int, FrozenSet[Vertex]] = {}
+        self._labels: List[int] = []
+
+        self._decisions: List[RollbackDecision] = []
+        self._boundary: Dict[str, int] = {}
+        self._report_queue: List[PersistReport] = []
+        self._last_persist = time.monotonic()
+        if config.persist_jitter:
+            self._last_persist += (hash(self.so_id) % 1000) / 1000.0 * config.persist_jitter
+
+        self._dead = False
+        self._persist_failures: List[BaseException] = []
+
+    # ------------------------------------------------------------------ #
+    # lifecycle                                                          #
+    # ------------------------------------------------------------------ #
+    def connect(self) -> None:
+        """Register with the coordinator; adopt rollback state; make an
+        initial durable version so a restore floor always exists."""
+        listed = self.so.ListVersions()
+        fragments: List[PersistReport] = []
+        for version, meta in listed:
+            try:
+                world, v, deps, _user = decode_metadata(meta)
+            except Exception:
+                continue
+            fragments.append(PersistReport(Vertex(self.so_id, world, v), deps))
+
+        resp = self.coordinator.connect(self.so_id, fragments)
+        with self._mu:
+            self.world = resp.world
+            self._decisions = list(resp.decisions)
+            self._boundary = dict(resp.boundary or {})
+
+        if resp.restore_to is not None:
+            # Restarted (or adopted) incarnation: load the prescribed prefix.
+            # Stale blobs above the target (from versions a past decision
+            # invalidated) stay on disk but are filtered everywhere by the
+            # decision list, which the coordinator replays durably.
+            self.so.Restore(resp.restore_to)
+            valid = {
+                r.vertex.version
+                for r in fragments
+                if not any(d.invalidates(r.vertex) for d in resp.decisions)
+            }
+            with self._mu:
+                self._committed = resp.restore_to
+                self._v_cur = resp.restore_to + 1
+                self._labels = sorted(v for v in valid if v <= resp.restore_to)
+                self._dep_log = {}
+        else:
+            # Fresh StateObject: synchronously persist version 0.
+            self._persist_now(force_label=0, synchronous=True)
+        self._flush_reports()
+
+    def mark_dead(self) -> None:
+        self._dead = True
+
+    def _check_alive(self) -> None:
+        if self._dead:
+            raise CrashedError(f"{self.so_id}: this incarnation has crashed")
+
+    # ------------------------------------------------------------------ #
+    # header classification (instrumentation + partition rules)          #
+    # ------------------------------------------------------------------ #
+    def classify_header(self, header: Optional[Header]) -> str:
+        """'ok' | 'discard' | 'delay' per Defs 4.1/4.3."""
+        if header is None:
+            return "ok"
+        with self._mu:
+            for dep in header.deps:
+                if dep.world > self.world:
+                    return "delay"
+                if dep.world < self.world:
+                    # Either rolled back or pre-recovery state whose sender
+                    # will retry post-recovery: discard (Def 4.3).
+                    if any(d.invalidates(dep) for d in self._decisions):
+                        return "discard"
+                    # Surviving prefix of an older epoch is adopted state; a
+                    # message from it is stale only if its sender rolled
+                    # back. Conservatively discard per the paper's rule.
+                    return "discard"
+                if any(d.invalidates(dep) for d in self._decisions):
+                    return "discard"
+        return "ok"
+
+    def any_invalid(self, deps: Iterable[Vertex]) -> bool:
+        with self._mu:
+            return any(
+                dep.world < self.world or any(d.invalidates(dep) for d in self._decisions)
+                for dep in deps
+            )
+
+    # ------------------------------------------------------------------ #
+    # actions (paper §3.1)                                               #
+    # ------------------------------------------------------------------ #
+    def start_action(self, header: Optional[Header] = None) -> bool:
+        self._check_alive()
+        self._epoch.acquire_shared()
+        try:
+            status = self.classify_header(header)
+            if status == "delay":
+                raise DelayMessage()
+            if status == "discard":
+                self._epoch.release_shared()
+                return False
+            if header is not None:
+                n = header.max_version_for()
+                if self.config.strict_commit_ordering:
+                    # Paper-literal Def 4.1: block the action until local
+                    # persistence has caught up with the sender watermark.
+                    while True:
+                        with self._mu:
+                            if self._v_cur >= n:
+                                break
+                        self._epoch.release_shared()
+                        self.maybe_persist(force=True)
+                        self._epoch.acquire_shared()
+                with self._mu:
+                    if n > self._v_cur:
+                        self._v_cur = n  # relabel (monotone watermark)
+                    self._current_deps |= {d for d in header.deps if d.so_id != self.so_id}
+            with self._mu:
+                self._dirty = True
+            return True
+        except DelayMessage:
+            self._epoch.release_shared()
+            raise
+        except Exception:
+            self._epoch.release_shared()
+            raise
+
+    def end_action(self) -> Header:
+        with self._mu:
+            h = Header.of(Vertex(self.so_id, self.world, self._v_cur))
+        self._epoch.release_shared()
+        return h
+
+    def abort_action(self) -> None:
+        """Release action protection without emitting a header (the effects,
+        if any, still belong to the in-progress version)."""
+        self._epoch.release_shared()
+
+    def current_vertex(self) -> Vertex:
+        with self._mu:
+            return Vertex(self.so_id, self.world, self._v_cur)
+
+    # ------------------------------------------------------------------ #
+    # sthreads                                                           #
+    # ------------------------------------------------------------------ #
+    def detach(self) -> SThread:
+        """End the calling action, producing an sthread carrying its deps."""
+        with self._mu:
+            deps = {Vertex(self.so_id, self.world, self._v_cur)}
+        self._epoch.release_shared()
+        return SThread(self, deps)
+
+    def merge(self, sthread: SThread) -> bool:
+        """Logically send sthread -> StateObject and start an action."""
+        try:
+            header = sthread.Send()
+        except RolledBackError:
+            return False
+        while True:
+            try:
+                return self.start_action(header)
+            except DelayMessage:
+                # The sthread observed a future failure epoch; catch up by
+                # applying pending decisions, then retry (Def 4.3 delay).
+                self.refresh()
+
+    # ------------------------------------------------------------------ #
+    # persistence (group commit)                                         #
+    # ------------------------------------------------------------------ #
+    def maybe_persist(self, force: bool = False) -> Optional[int]:
+        self._check_alive()
+        now = time.monotonic()
+        with self._mu:
+            due = (now - self._last_persist) >= self.config.group_commit_interval
+            if not force and not (due and self._dirty):
+                return None
+            if not self._dirty and not force:
+                return None
+        return self._persist_now()
+
+    def _persist_now(self, force_label: Optional[int] = None, synchronous: bool = False) -> int:
+        self._epoch.acquire_exclusive()
+        try:
+            with self._mu:
+                label = self._v_cur if force_label is None else force_label
+                deps = frozenset(self._current_deps)
+                self._current_deps = set()
+                self._dep_log[label] = deps
+                self._labels.append(label)
+                self._v_cur = label + 1
+                self._dirty = False
+                self._last_persist = time.monotonic()
+                world = self.world
+            user_meta = b""
+            if self.config.user_metadata_fn is not None:
+                user_meta = self.config.user_metadata_fn()  # type: ignore[operator]
+            meta = encode_metadata(world, label, deps, user=user_meta)
+            done = threading.Event()
+
+            def _callback() -> None:
+                with self._mu:
+                    if label > self._committed:
+                        self._committed = label
+                    self._report_queue.append(
+                        PersistReport(Vertex(self.so_id, world, label), tuple(deps))
+                    )
+                done.set()
+
+            self.so.Persist(label, meta, _callback)
+        finally:
+            self._epoch.release_exclusive()
+        if synchronous:
+            done.wait()
+            self._flush_reports()
+        return label
+
+    # ------------------------------------------------------------------ #
+    # refresh: background protocol driving (paper Table 2)               #
+    # ------------------------------------------------------------------ #
+    def refresh(self) -> None:
+        self._check_alive()
+        self.maybe_persist()
+        self._flush_reports()
+        self._poll_coordinator()
+
+    def _flush_reports(self) -> None:
+        with self._mu:
+            reports, self._report_queue = self._report_queue, []
+        if reports:
+            self.coordinator.report(self.so_id, reports)
+
+    def _poll_coordinator(self) -> None:
+        with self._mu:
+            known = self.world
+        resp = self.coordinator.poll(self.so_id, known)
+        if resp.resend_fragments:
+            self._resend_fragments()
+        for d in sorted(resp.decisions, key=lambda d: d.fsn):
+            self._apply_decision(d)  # Recovery Sequencing Rule (Def 4.2)
+        if resp.boundary is not None:
+            with self._mu:
+                self._boundary = dict(resp.boundary)
+                self._boundary_cond.notify_all()
+            self._apply_prune()
+
+    def _resend_fragments(self) -> None:
+        fragments: List[PersistReport] = []
+        for version, meta in self.so.ListVersions():
+            try:
+                world, v, deps, _ = decode_metadata(meta)
+            except Exception:
+                continue
+            fragments.append(PersistReport(Vertex(self.so_id, world, v), deps))
+        self.coordinator.receive_fragments(self.so_id, fragments)
+
+    def _apply_prune(self) -> None:
+        with self._mu:
+            b = self._boundary.get(self.so_id, -1)
+            floor_candidates = [l for l in self._labels if l <= b]
+            if len(floor_candidates) < 2:
+                return
+            floor = floor_candidates[-1]
+            self._labels = [l for l in self._labels if l >= floor]
+            for l in [l for l in self._dep_log if l < floor]:
+                self._dep_log.pop(l, None)
+        self.so.Prune(floor)
+
+    # ------------------------------------------------------------------ #
+    # recovery (paper §4.2 Recovery Protocol + §5.3 mitigation)          #
+    # ------------------------------------------------------------------ #
+    def _apply_decision(self, d: RollbackDecision) -> None:
+        with self._mu:
+            if d.fsn <= self.world:
+                return
+        self._epoch.acquire_exclusive()
+        try:
+            with self._mu:
+                if d.fsn <= self.world:
+                    return
+                target = d.targets.get(self.so_id)
+                inmem_deps: Set[Vertex] = set(self._current_deps)
+                for label, deps in self._dep_log.items():
+                    if target is None or label > target:
+                        inmem_deps |= deps
+                own_prefix_intact = target is None or target >= self._committed
+                clean = not any(d.invalidates(dep) for dep in inmem_deps)
+                can_skip = own_prefix_intact and clean
+            if can_skip:
+                # §5.3: participants not exposed to speculative (now lost)
+                # state keep their in-memory content; only the epoch advances.
+                with self._mu:
+                    self.world = d.fsn
+                    self._decisions.append(d)
+            else:
+                assert target is not None
+                self.so.Restore(target)
+                with self._mu:
+                    self.world = d.fsn
+                    self._decisions.append(d)
+                    self._committed = min(self._committed, target)
+                    self._v_cur = target + 1
+                    self._current_deps = set()
+                    self._dep_log = {l: v for l, v in self._dep_log.items() if l <= target}
+                    self._labels = [l for l in self._labels if l <= target]
+                    self._dirty = False
+                    self._report_queue = [
+                        r for r in self._report_queue if r.vertex.version <= target
+                    ]
+        finally:
+            self._epoch.release_exclusive()
+
+    # ------------------------------------------------------------------ #
+    # barriers (paper §3.2)                                              #
+    # ------------------------------------------------------------------ #
+    def barrier(self, deps: FrozenSet[Vertex], timeout: Optional[float] = None) -> None:
+        """Block until every vertex in ``deps`` is inside the recoverable
+        boundary. Our own pending state is force-persisted once so local
+        durability is never the reason a barrier waits a full group-commit
+        period."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._mu:
+            needs_local = any(
+                dep.so_id == self.so_id and dep.version > self._committed for dep in deps
+            )
+        if needs_local:
+            self.maybe_persist(force=True)
+
+        while True:
+            if self.any_invalid(deps):
+                raise RolledBackError("barrier deps were rolled back")
+            with self._mu:
+                if all(self._boundary.get(dep.so_id, -1) >= dep.version for dep in deps):
+                    return
+            self._flush_reports()
+            self._poll_coordinator()
+            with self._mu:
+                if all(self._boundary.get(dep.so_id, -1) >= dep.version for dep in deps):
+                    return
+                remaining = self.config.barrier_poll_interval
+                if deadline is not None:
+                    remaining = min(remaining, deadline - time.monotonic())
+                    if remaining <= 0:
+                        raise TimeoutError(f"barrier timed out waiting for {set(deps)}")
+                self._boundary_cond.wait(timeout=remaining)
+
+    # ------------------------------------------------------------------ #
+    # introspection                                                      #
+    # ------------------------------------------------------------------ #
+    def stats(self) -> Dict[str, object]:
+        with self._mu:
+            return {
+                "so_id": self.so_id,
+                "world": self.world,
+                "v_cur": self._v_cur,
+                "committed": self._committed,
+                "boundary": dict(self._boundary),
+                "decisions": len(self._decisions),
+                "labels": list(self._labels),
+            }
+
+    @property
+    def boundary(self) -> Dict[str, int]:
+        with self._mu:
+            return dict(self._boundary)

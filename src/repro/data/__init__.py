@@ -1,0 +1,3 @@
+from .pipeline import DataPipelineStateObject, SyntheticLMData
+
+__all__ = ["DataPipelineStateObject", "SyntheticLMData"]

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """q/k/v: (BH, S|T, D) — plain softmax attention."""
+    scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(q.shape[1])[:, None]
+        ki = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(ki <= qi, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk=256):
+    """Sequential (non-chunked) SSD recurrence — the ground-truth oracle.
+    x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,G,N); returns y (B,S,H,P)."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)   # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                               # (B,H,P), (B,H), (B,H,N) x2
+        decay = jnp.exp(dtt * Af)                           # (B,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bh, 1, 0),
+        jnp.moveaxis(Ch, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)           # (B,S,H,P)
+
+
+def delta_encode_ref(new, prev):
+    delta = new.astype(jnp.float32) - prev.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(delta), axis=1)
+    scales = jnp.maximum(amax, 1e-30) / 127.0
+    codes = jnp.clip(jnp.round(delta / scales[:, None]), -127, 127).astype(jnp.int8)
+    return codes, scales
+
+
+def delta_decode_ref(codes, scales, prev, dtype=jnp.bfloat16):
+    delta = codes.astype(jnp.float32) * scales[:, None]
+    return (prev.astype(jnp.float32) + delta).astype(dtype)

@@ -1,0 +1,102 @@
+"""Step-function builders shared by the dry-run, benchmarks, and real loops.
+
+``train_step`` is one optimizer step (forward + backward + AdamW).
+``prefill_step`` runs the full-sequence forward, emitting last-token logits.
+``serve_step`` decodes one token against an explicit KV/state cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step as model_decode_step
+from ..models import forward, lm_loss
+from ..models.config import ModelConfig
+from ..models.scan_utils import _scan
+from ..models.transformer import chunked_lm_loss
+from ..models.tuning import get_tuning
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+
+def split_batch(batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    extras = {k: v for k, v in batch.items() if k not in ("tokens",)}
+    return batch["tokens"], extras
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    remat: str = "full"):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        tun = get_tuning()
+        tokens, extras = split_batch(batch)
+
+        def loss_fn(p, tok, ext):
+            out, _, aux = forward(cfg, p, tok[:, :-1], extras=ext, remat=remat)
+            if tun.loss_chunk:
+                return chunked_lm_loss(cfg, p, out, tok[:, 1:], aux, tun.loss_chunk)
+            return lm_loss(cfg, out, tok[:, 1:], aux)
+
+        mb = tun.microbatch
+        if mb > 1 and tokens.shape[0] % mb == 0:
+            # gradient accumulation: divides saved-activation memory by mb
+            toks = tokens.reshape(mb, tokens.shape[0] // mb, *tokens.shape[1:])
+            exts = {
+                k: v.reshape(mb, v.shape[0] // mb, *v.shape[1:])
+                for k, v in extras.items()
+            }
+
+            def body(acc, xs):
+                tok_mb = xs[0]
+                ext_mb = xs[1]
+                loss_mb, g = jax.value_and_grad(loss_fn)(params, tok_mb, ext_mb)
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc[0], g
+                )
+                return (acc_g, acc[1] + loss_mb), None
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = _scan(body, (zero, 0.0), (toks, exts))
+            grads = jax.tree_util.tree_map(lambda g: (g / mb), gsum)
+            loss = lsum / mb
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens, extras)
+        new_params, new_opt = adamw_update(params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        tokens, extras = split_batch(batch)
+        logits, _, _ = forward(cfg, params, tokens, extras=extras, last_only=True)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch, cache_index):
+        tokens, extras = split_batch(batch)
+        logits, new_cache = model_decode_step(
+            cfg, params, cache, tokens, cache_index, extras=extras
+        )
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_step(cfg: ModelConfig, kind: str, remat: str = "full"):
+    if kind == "train":
+        return make_train_step(cfg, remat=remat)
+    if kind == "prefill":
+        return make_prefill_step(cfg)
+    if kind == "decode":
+        return make_serve_step(cfg)
+    raise ValueError(kind)

@@ -1,0 +1,28 @@
+"""JAX model substrate: configs, parameter descriptors, forward/decode."""
+from .config import MLAConfig, ModelConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES, shape_by_name
+from .params import (
+    PDesc,
+    abstract_params,
+    init_params,
+    param_bytes,
+    param_count,
+    resolve_spec,
+    resolve_specs,
+    stack,
+    stack_tree,
+)
+from .transformer import (
+    cache_descs,
+    decode_step,
+    forward,
+    lm_loss,
+    param_descs,
+)
+
+__all__ = [
+    "MLAConfig", "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig",
+    "SHAPES", "shape_by_name",
+    "PDesc", "abstract_params", "init_params", "param_bytes", "param_count",
+    "resolve_spec", "resolve_specs", "stack", "stack_tree",
+    "cache_descs", "decode_step", "forward", "lm_loss", "param_descs",
+]

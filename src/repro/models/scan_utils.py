@@ -1,0 +1,31 @@
+"""Scan-unroll context for dry-run cost probes.
+
+XLA's HloCostAnalysis counts a while-loop body once regardless of trip
+count; the dry-run's shallow cost probes therefore lower with fully
+unrolled stacks. Production paths keep rolled scans (compact HLO).
+"""
+from __future__ import annotations
+
+import jax
+
+_SCAN_UNROLL: bool = False
+
+
+class scan_unroll:
+    def __enter__(self):
+        global _SCAN_UNROLL
+        self._prev = _SCAN_UNROLL
+        _SCAN_UNROLL = True
+
+    def __exit__(self, *exc):
+        global _SCAN_UNROLL
+        _SCAN_UNROLL = self._prev
+
+
+def _scan(body, init, xs, unrollable: bool = True):
+    """unrollable=False: keep rolled even under the probe context — used for
+    inner recurrences whose per-iteration cost is negligible (e.g. the SSD
+    chunk-state recurrence: its einsums are hoisted outside the scan), where
+    unrolling only explodes compile time without changing measured cost."""
+    unroll = True if (_SCAN_UNROLL and unrollable) else 1
+    return jax.lax.scan(body, init, xs, unroll=unroll)

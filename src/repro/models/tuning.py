@@ -1,0 +1,101 @@
+"""Performance-tuning flags (the §Perf hillclimb knobs).
+
+A context-var style switchboard so the dry-run can lower the SAME cell in
+baseline and optimized variants without touching model call signatures:
+
+  decode_seq_constraint — pin decode K/V (and MLA compressed caches) to
+      sequence-sharding via with_sharding_constraint, preventing GSPMD's
+      involuntary full rematerialization when kv_heads cannot divide the
+      model axis (observed on yi-6b decode_32k: the partitioner re-shards
+      the 2x(B,S,N,H) cache per layer);
+  loss_chunk — compute the LM head + cross-entropy over sequence chunks of
+      this size (0 = off), bounding the fp32 logits working set;
+  microbatch — grad-accumulation microbatches per step (1 = off), dividing
+      saved-activation memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class Tuning:
+    decode_seq_constraint: bool = False
+    loss_chunk: int = 0
+    microbatch: int = 1
+    # Pin (B, S, D) activations to batch-over-data at every block boundary.
+    # Under FSDP (weights' embed dim sharded over "data") GSPMD otherwise
+    # resolves the batch-vs-weight contest by REPLICATING batch and
+    # sharding activations on d_model — measured 12.2 TB/chip of f32
+    # full-batch all-reduces on llama-90B train (§Perf B3).
+    constrain_activations: bool = False
+    # "einsum" (GShard grouped dispatch, GSPMD-native) or "ep"
+    # (shard_map all_to_all expert parallelism, parallel/ep_moe.py)
+    moe_impl: str = "einsum"
+
+
+_CURRENT = Tuning()
+
+
+def get_tuning() -> Tuning:
+    return _CURRENT
+
+
+class tuning:
+    def __init__(self, **kw) -> None:
+        self._kw = kw
+
+    def __enter__(self) -> Tuning:
+        global _CURRENT
+        self._prev = _CURRENT
+        _CURRENT = replace(_CURRENT, **self._kw)
+        return _CURRENT
+
+    def __exit__(self, *exc) -> None:
+        global _CURRENT
+        _CURRENT = self._prev
+
+
+def constrain(x, entries):
+    """Best-effort with_sharding_constraint under the ambient mesh context.
+    ``entries``: one per dim — "model"/axis names, None (replicated), or
+    "free" (unconstrained). No-ops (via exception) when there is no mesh
+    context or the spec does not divide — so smoke tests and non-tuned
+    paths are unaffected; only tuned dry-run lowers activate it."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        spec = tuple(P.UNCONSTRAINED if e == "free" else e for e in entries)
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def constrain_seq_sharded(x, seq_axis: int):
+    entries = ["free"] * x.ndim
+    entries[seq_axis] = "model"
+    for i in range(x.ndim):
+        if i != seq_axis and i != 0:
+            entries[i] = None  # model axis consumed by seq; rest replicated
+    return constrain(x, entries)
+
+
+def constrain_batch_sharded(x):
+    """Pin dim0 to the batch mesh axes (pod+data when present), leaving the
+    rest replicated (Megatron-style activation layout: (B/dp, S, D-full))."""
+    if not get_tuning().constrain_activations:
+        return x
+    for batch_axes in (("pod", "data"), "data"):
+        y = constrain(x, (batch_axes,) + (None,) * (x.ndim - 1))
+        if y is not x:
+            return y
+    return x
+
+
+def constrain_replicated_heads(q):
+    """Decode flash-decode scheme: q is (B, 1, N, H) and tiny — replicating
+    it over the model axis lets QK^T run against sequence-sharded K/V with
+    no resharding; softmax and PV reduce over the sharded T dim with small
+    stat all-reduces instead of gathering the cache."""
+    return constrain(q, ("free", None, None, None))

@@ -1,0 +1,7 @@
+from .adamw import adamw_init, adamw_update, AdamWConfig
+from .compress import compress_gradients_int8, decompress_gradients_int8
+
+__all__ = [
+    "adamw_init", "adamw_update", "AdamWConfig",
+    "compress_gradients_int8", "decompress_gradients_int8",
+]

@@ -1,0 +1,15 @@
+from .sharding import (
+    ShardingProfile,
+    batch_input_descs,
+    make_rules,
+    profile_for,
+    tree_shardings,
+)
+
+__all__ = [
+    "ShardingProfile",
+    "batch_input_descs",
+    "make_rules",
+    "profile_for",
+    "tree_shardings",
+]

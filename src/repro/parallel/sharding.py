@@ -1,0 +1,115 @@
+"""Sharding profiles: logical-axis -> mesh-axis rules per (arch x shape).
+
+Parallelism features at 1000+-node scale (DESIGN.md §6):
+  * DP: batch over ("pod", "data") — pods are a pure-DP outer axis, so the
+    only cross-pod (DCI) traffic is the gradient all-reduce;
+  * TP: heads / kv_heads / ffn / vocab / experts over "model";
+  * FSDP (2D): for params too large to replicate per data shard (llama-90B),
+    the "embed" dim of every weight additionally shards over "data"
+    (params+optimizer divide by 16*16=256);
+  * SP-ish decode fallback: when kv_heads cannot divide "model" (MQA), the
+    KV-cache *sequence* dim shards over "model" (flash-decode style: GSPMD
+    inserts the partial-softmax combine);
+  * EP: MoE experts over "model" when divisible, else expert_ffn.
+
+Divisibility is checked per-leaf by ``resolve_spec``; anything that does not
+divide falls back one level and ultimately to replication — the dry-run
+records the outcome rather than crashing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.params import PDesc, resolve_specs
+
+
+@dataclass(frozen=True)
+class ShardingProfile:
+    name: str
+    rules: Dict[str, Tuple[str, ...]]
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_rules(mesh: Mesh, *, kind: str, fsdp: bool = False) -> ShardingProfile:
+    batch = _batch_axes(mesh)
+    rules: Dict[str, Tuple[str, ...]] = {
+        "batch": batch,
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ffn": ("model",),
+        "experts": ("model",),
+        "expert_ffn": ("model",),   # fallback when experts % model != 0
+    }
+    if fsdp:
+        rules["embed"] = ("data",)  # 2D: TP x FSDP
+    if kind in ("decode", "prefill"):
+        rules["seq"] = ("model",)   # fallback when kv_heads can't shard (MQA)
+    name = f"{kind}{'_fsdp' if fsdp else ''}"
+    return ShardingProfile(name, rules)
+
+
+#: archs whose params+optimizer do not fit replicated-per-data-shard.
+_FSDP_REQUIRED = {"llama-3.2-vision-90b"}
+#: archs large enough that FSDP is the sensible default even if not forced.
+_FSDP_PREFERRED = {"glm4-9b", "deepseek-v2-lite-16b", "yi-6b"}
+
+
+def profile_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> ShardingProfile:
+    fsdp = shape.kind == "train" and (
+        cfg.name in _FSDP_REQUIRED or cfg.name in _FSDP_PREFERRED
+    )
+    return make_rules(mesh, kind=shape.kind, fsdp=fsdp)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def tree_shardings(descs, profile: ShardingProfile, mesh: Mesh):
+    """PDesc tree -> NamedSharding tree."""
+    specs = resolve_specs(descs, profile.rules, mesh_axis_sizes(mesh))
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# model inputs as descriptor trees (shared by dry-run and real runs)           #
+# --------------------------------------------------------------------------- #
+def batch_input_descs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, PDesc]:
+    """Descriptor tree for one step's inputs (tokens + stub modality)."""
+    B = shape.global_batch
+    if shape.kind == "train":
+        descs = {"tokens": PDesc((B, shape.seq_len + 1), ("batch", "seq"))}
+    elif shape.kind == "prefill":
+        descs = {"tokens": PDesc((B, shape.seq_len), ("batch", "seq"))}
+    else:  # decode: one new token against a seq_len-deep cache
+        descs = {"tokens": PDesc((B, 1), ("batch", None))}
+    if cfg.family == "encdec":
+        descs["frames"] = PDesc((B, cfg.source_len, cfg.d_model), ("batch", None, None))
+    if cfg.family == "vlm":
+        descs["image_embeds"] = PDesc(
+            (B, cfg.num_image_tokens, cfg.d_model), ("batch", None, None)
+        )
+    return descs
+
+
+def batch_dtypes(cfg: ModelConfig) -> Dict[str, object]:
+    out = {"tokens": jnp.int32}
+    if cfg.family == "encdec":
+        out["frames"] = jnp.bfloat16
+    if cfg.family == "vlm":
+        out["image_embeds"] = jnp.bfloat16
+    return out

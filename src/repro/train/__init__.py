@@ -1,0 +1,3 @@
+from .loop import TrainRunResult, run_resilient_training
+
+__all__ = ["TrainRunResult", "run_resilient_training"]

@@ -1,0 +1,40 @@
+"""Shared fixtures: a minimal CounterStateObject (the paper's running
+example, Fig. 3/4) used across protocol tests, and cluster factories.
+
+NOTE: XLA_FLAGS / device-count manipulation is intentionally absent here —
+smoke tests and benches must see the 1 real CPU device; only
+``repro.launch.dryrun`` installs the 512-device placeholder flag.
+"""
+from __future__ import annotations
+
+import threading
+from pathlib import Path
+from typing import Optional, Tuple
+
+import pytest
+
+from repro.services.counter import CounterStateObject as CounterSO
+
+
+@pytest.fixture
+def cluster_factory(tmp_path):
+    """Yields a factory building LocalClusters rooted under tmp_path."""
+    from repro.core import LocalCluster
+
+    made = []
+
+    def make(name: str = "c0", **kw) -> LocalCluster:
+        c = LocalCluster(tmp_path / name, **kw)
+        made.append(c)
+        return c
+
+    yield make
+    for c in made:
+        c.shutdown()
+
+
+def make_counter(tmp_path: Path, name: str, io_ms: float = 0.0):
+    def factory() -> CounterSO:
+        return CounterSO(tmp_path / f"so_{name}", io_ms=io_ms)
+
+    return factory

@@ -1,0 +1,116 @@
+"""Unit tests for the analysis layer: HLO collective parsing, roofline
+terms, and the analytic HBM estimator; plus hypothesis property tests for
+spec resolution."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec
+
+from repro.analysis.hlo import collective_wire_bytes, parse_collectives
+from repro.analysis.roofline import active_param_count, model_flops, roofline_terms
+from repro.configs import ARCHITECTURES, get_config
+from repro.models import shape_by_name
+from repro.models.params import PDesc, resolve_spec
+
+
+HLO = """
+HloModule test
+%fused = f32[128,256]{1,0} fusion(%a), kind=kLoop
+%ar = bf16[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+%ag = f32[64,512]{1,0} all-gather(%y), replica_groups=[16,16]<=[256], dimensions={1}
+%rs = bf16[32]{0} reduce-scatter(%z), replica_groups={{0,1}}, to_apply=%add
+%a2a = bf16[8,8]{1,0} all-to-all(%w), replica_groups={{0,1,2,3,4,5,6,7}}
+%cp = f32[16]{0} collective-permute(%v), source_target_pairs={{0,1}}
+%ard = bf16[4]{0} all-reduce-done(%ar2)
+"""
+
+
+class TestHLOParsing:
+    def test_parse_finds_all_collectives(self):
+        ops = parse_collectives(HLO)
+        kinds = [k for k, _, _ in ops]
+        assert kinds.count("all-reduce") == 1  # -done skipped
+        assert "all-gather" in kinds and "reduce-scatter" in kinds
+        assert "all-to-all" in kinds and "collective-permute" in kinds
+
+    def test_shape_bytes_and_group_sizes(self):
+        ops = {k: (b, n) for k, b, n in parse_collectives(HLO)}
+        assert ops["all-reduce"] == (1024 * 2, 4)
+        assert ops["all-gather"] == (64 * 512 * 4, 16)  # [16,16] groups of 16
+        assert ops["reduce-scatter"] == (32 * 2, 2)
+
+    def test_wire_byte_formulas(self):
+        w = collective_wire_bytes(HLO)
+        assert w["all-reduce"] == pytest.approx(2 * 2048 * 3 / 4)
+        assert w["all-gather"] == pytest.approx(64 * 512 * 4 * 15 / 16)
+        assert w["reduce-scatter"] == pytest.approx(64 * 1)
+        assert w["total"] == pytest.approx(
+            w["all-reduce"] + w["all-gather"] + w["reduce-scatter"]
+            + w["all-to-all"] + w["collective-permute"]
+        )
+
+
+class TestRoofline:
+    def test_moe_active_params_smaller_than_total(self):
+        cfg = get_config("deepseek_v2_lite_16b")
+        assert active_param_count(cfg) < cfg.param_count()
+
+    def test_model_flops_train_is_6nd(self):
+        cfg = get_config("yi_6b")
+        shape = shape_by_name("train_4k")
+        n = active_param_count(cfg)
+        assert model_flops(cfg, shape) == pytest.approx(6 * n * 256 * 4096)
+
+    def test_terms_and_dominance(self):
+        cfg = get_config("yi_6b")
+        shape = shape_by_name("train_4k")
+        cost = {"flops": 1e14, "bytes accessed": 1e12}
+        coll = {"total": 1e10}
+        t = roofline_terms(cost, coll, cfg, shape, chips=256)
+        assert t["compute_s"] == pytest.approx(1e14 / 197e12)
+        assert t["memory_s"] == pytest.approx(1e12 / 819e9)
+        assert t["collective_s"] == pytest.approx(1e10 / 50e9)
+        assert t["dominant"] == "memory"
+        assert 0 < t["roofline_fraction"] <= 1.0
+
+    def test_param_count_matches_descriptors(self):
+        """Analytic param_count vs the descriptor tree (ground truth)."""
+        from repro.models import param_count as desc_count, param_descs
+
+        for arch in ARCHITECTURES:
+            cfg = get_config(arch)
+            analytic = cfg.param_count()
+            actual = desc_count(param_descs(cfg))
+            assert abs(analytic - actual) / actual < 0.05, (
+                arch, analytic, actual
+            )
+
+
+class TestSpecResolution:
+    def test_divisibility_fallback(self):
+        sizes = {"data": 16, "model": 16}
+        rules = {"kv_heads": ("model",), "seq": ("model",), "batch": ("data",)}
+        # kv=4 does not divide 16 -> seq takes the model axis
+        d = PDesc((128, 32768, 4, 128), ("batch", "seq", "kv_heads", None))
+        spec = resolve_spec(d, rules, sizes)
+        assert spec == PartitionSpec("data", "model")
+        # kv=32 divides -> kv wins over seq (priority)
+        d2 = PDesc((128, 32768, 32, 128), ("batch", "seq", "kv_heads", None))
+        assert resolve_spec(d2, rules, sizes) == PartitionSpec("data", None, "model")
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        dim=st.sampled_from([1, 2, 3, 4, 8, 16, 40, 64, 100, 256]),
+        model=st.sampled_from([1, 2, 4, 8, 16]),
+    )
+    def test_resolution_never_produces_nondividing_spec(self, dim, model):
+        sizes = {"model": model, "data": 4}
+        rules = {"x": ("model",)}
+        d = PDesc((dim,), ("x",))
+        spec = resolve_spec(d, rules, sizes)
+        if spec and spec[0] is not None:
+            assert dim % model == 0

@@ -1,0 +1,137 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs ref.py
+oracles, plus a hypothesis property test for delta-encode round-trips and a
+cross-check of the model's chunked SSD against the sequential oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.models.ssm import ssd_chunked
+
+
+# --------------------------------------------------------------------------- #
+# flash attention                                                              #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("s,d,bq,bk", [
+    (128, 64, 64, 64),
+    (256, 64, 128, 64),
+    (256, 128, 128, 128),
+    (64, 32, 32, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_core(s, d, bq, bk, causal, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(k1, (2, s, d), dtype)
+    k = jax.random.normal(k2, (2, s, d), dtype)
+    v = jax.random.normal(k3, (2, s, d), dtype)
+    from repro.kernels.flash_attention import flash_attention as fa_core
+
+    out = fa_core(q, k, v, causal=causal, block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        out.astype(np.float32), want.astype(np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("nq,nkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_gqa_wrapper(nq, nkv):
+    b, s, hd = 2, 128, 64
+    keys = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(keys[0], (b, s, nq, hd), jnp.float32)
+    k = jax.random.normal(keys[1], (b, s, nkv, hd), jnp.float32)
+    v = jax.random.normal(keys[2], (b, s, nkv, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    kr = jnp.repeat(k, nq // nkv, axis=2)
+    vr = jnp.repeat(v, nq // nkv, axis=2)
+    want = jnp.stack([
+        ref.flash_attention_ref(
+            q[:, :, h].reshape(b, s, hd), kr[:, :, h], vr[:, :, h], causal=True
+        ) for h in range(nq)
+    ], axis=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# SSD                                                                          #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("s,h,p,n,g,chunk", [
+    (64, 2, 16, 16, 1, 16),
+    (128, 4, 32, 32, 2, 32),
+    (64, 2, 64, 128, 1, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_vs_sequential_oracle(s, h, p, n, g, chunk, dtype):
+    keys = jax.random.split(jax.random.key(2), 4)
+    b = 2
+    x = jax.random.normal(keys[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, s, h), jnp.float32)) * 0.1
+    A = -jnp.exp(jax.random.normal(keys[2], (h,), jnp.float32) * 0.3)
+    Bm = jax.random.normal(keys[3], (b, s, g, n), dtype) * 0.5
+    Cm = jax.random.normal(keys[0], (b, s, g, n), dtype) * 0.5
+    out = ops.ssd(x, dt.astype(dtype), A, Bm, Cm, chunk=chunk, interpret=True)
+    want = ref.ssd_ref(x, dt.astype(dtype), A, Bm, Cm)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_model_chunked_ssd_matches_oracle():
+    """The model's XLA chunked path must equal the sequential recurrence."""
+    b, s, h, p, n, g = 2, 64, 4, 16, 16, 1
+    keys = jax.random.split(jax.random.key(3), 4)
+    x = jax.random.normal(keys[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.normal(keys[2], (h,)) * 0.3)
+    Bm = jax.random.normal(keys[3], (b, s, g, n)) * 0.5
+    Cm = jax.random.normal(keys[0], (b, s, g, n)) * 0.5
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    want = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# delta encode                                                                 #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("nb,blk", [(4, 256), (16, 1024), (1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_delta_encode_matches_ref_and_roundtrips(nb, blk, dtype):
+    k1, k2 = jax.random.split(jax.random.key(4))
+    prev = jax.random.normal(k1, (nb, blk), dtype)
+    new = prev + jax.random.normal(k2, (nb, blk), dtype) * 0.01
+    codes, scales = ops.delta_encode(new, prev, interpret=True)
+    codes_r, scales_r = ref.delta_encode_ref(new, prev)
+    # codes may differ by 1 at exact rounding ties (bf16 inputs); scales match
+    diff = np.abs(np.asarray(codes, np.int32) - np.asarray(codes_r, np.int32))
+    assert diff.max() <= 1 and (diff > 0).mean() < 0.02
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scales_r), rtol=1e-6)
+    dec = ops.delta_decode(codes, scales, prev, dtype=jnp.float32, interpret=True)
+    err = np.max(np.abs(np.asarray(dec) - np.asarray(new, np.float32)))
+    # quantization error bound: scale/2 per element
+    assert err <= float(np.max(np.asarray(scales))) * 0.51 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 4),
+    blk=st.sampled_from([128, 256]),
+    mag=st.floats(1e-6, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_delta_roundtrip_error_bound_property(nb, blk, mag, seed):
+    """Property: decode(encode(new, prev), prev) is within one quant step."""
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    prev = jax.random.normal(k1, (nb, blk), jnp.float32)
+    new = prev + jax.random.normal(k2, (nb, blk), jnp.float32) * mag
+    codes, scales = ref.delta_encode_ref(new, prev)
+    dec = ref.delta_decode_ref(codes, scales, prev, dtype=jnp.float32)
+    err = np.abs(np.asarray(dec) - np.asarray(new))
+    bound = np.asarray(scales)[:, None] * 0.51 + 1e-6
+    assert (err <= bound).all()

@@ -1,0 +1,110 @@
+"""Additional protocol edge cases: strict commit-ordering backpressure,
+prune-driven memory bounds, multiple overlapping failures, and the
+version-relabel equivalence between strict and relabel modes."""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core import DependencyGraph, LocalCluster
+from conftest import CounterSO, make_counter
+
+
+class TestStrictBackpressure:
+    def test_strict_mode_acts_as_straggler_backpressure(self, cluster_factory, tmp_path):
+        """A fast producer cannot run arbitrarily far ahead of a slow
+        consumer's persistence in strict mode (paper Def 4.1 / §5.3):
+        receiving forces the consumer to catch up its local version."""
+        c = cluster_factory(
+            refresh_interval=None, group_commit_interval=99, strict_commit_ordering=True
+        )
+        fast = c.add("fast", make_counter(tmp_path, "f"))
+        slow = c.add("slow", make_counter(tmp_path, "s"))
+        for _ in range(10):
+            fast.runtime.maybe_persist(force=True)
+        _, h = fast.increment(None)
+        assert h.max_version_for() == 11
+        slow.increment(h)
+        # slow persisted its way up to the sender watermark
+        assert slow.runtime.stats()["v_cur"] >= 11
+        assert len(slow.runtime.stats()["labels"]) >= 10
+
+    def test_relabel_and_strict_agree_on_values(self, cluster_factory, tmp_path):
+        """DESIGN.md §2 equivalence: both modes produce the same application
+        state; they differ only in persistence work on the receive path."""
+        results = {}
+        for mode in (False, True):
+            c = cluster_factory(
+                f"m{mode}", refresh_interval=None,
+                group_commit_interval=99, strict_commit_ordering=mode,
+            )
+            p = c.add("p", make_counter(tmp_path, f"pp{mode}"))
+            q = c.add("q", make_counter(tmp_path, f"qq{mode}"))
+            for _ in range(3):
+                p.runtime.maybe_persist(force=True)
+            _, h = p.increment(None)
+            v, _ = q.increment(h, by=5)
+            results[mode] = (p.value, v)
+        assert results[False] == results[True]
+
+
+class TestPruning:
+    def test_boundary_advance_prunes_graph_and_store(self, cluster_factory, tmp_path):
+        c = cluster_factory(group_commit_interval=0.004)
+        so = c.add("ctr", make_counter(tmp_path, "pr"))
+        for i in range(6):
+            so.increment(None)
+            so.runtime.maybe_persist(force=True)
+            time.sleep(0.01)
+        # settle: reports flushed, boundary advanced, prune delivered
+        for _ in range(5):
+            c.refresh_all()
+            time.sleep(0.01)
+        st = so.runtime.stats()
+        assert st["boundary"]["ctr"] >= 4
+        # local label list is pruned to the boundary floor
+        assert len(st["labels"]) <= 3
+        # coordinator graph stays bounded
+        assert c.coordinator.stats()["graph_vertices"] <= 4
+
+
+class TestMultiFailure:
+    def test_overlapping_failures_converge(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        sos = {n: c.add(n, make_counter(tmp_path, f"mf{n}")) for n in "abc"}
+        # a -> b -> c speculative chain
+        _, ha = sos["a"].increment(None)
+        _, hb = sos["b"].increment(ha)
+        sos["c"].increment(hb)
+        # two failures back-to-back, before anyone refreshes
+        c.kill("a")
+        c.kill("b")
+        for _ in range(3):
+            c.refresh_all()
+        a, b, cc = (c.get(n) for n in "abc")
+        assert a.runtime.world == b.runtime.world == cc.runtime.world == 2
+        # everything speculative rolled back everywhere
+        assert a.value == 0 and b.value == 0 and cc.value == 0
+
+    def test_failure_of_every_member_then_recovery(self, cluster_factory, tmp_path):
+        c = cluster_factory(group_commit_interval=0.005)
+        p = c.add("p", make_counter(tmp_path, "ap"))
+        q = c.add("q", make_counter(tmp_path, "aq"))
+        _, h = p.increment(None)
+        q.increment(h)
+        assert q.StartAction(None) and q.wait_durable(timeout=5.0)
+        q.EndAction()
+        c.kill("p")
+        c.kill("q")
+        p2, q2 = c.get("p"), c.get("q")
+        # durable prefix survived both failures
+        assert p2.value == 1 and q2.value == 1
+        # and the system keeps working once everyone reaches the same epoch
+        # (p restarted at fsn=1; q's failure minted fsn=2 — a header from
+        # world 1 at a world-2 receiver is DISCARDED per Def 4.3, so the
+        # sender must refresh first)
+        c.refresh_all()
+        assert p2.runtime.world == q2.runtime.world == 2
+        _, h = p2.increment(None)
+        assert q2.increment(h) is not None

@@ -1,0 +1,256 @@
+"""Behavioural tests for the §5.2 speculative services and §6.1 apps."""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core import Header
+from repro.services import (
+    EventBroker,
+    SpeculativeKVStore,
+    SpeculativeLog,
+    TwoPCClient,
+    TwoPCCoordinator,
+    TwoPCParticipant,
+    WorkflowEngine,
+)
+
+
+# --------------------------------------------------------------------------- #
+# speculative log                                                              #
+# --------------------------------------------------------------------------- #
+class TestSpeculativeLog:
+    def test_append_scan_and_durability(self, cluster_factory, tmp_path):
+        c = cluster_factory(group_commit_interval=0.005)
+        log = c.add("log", lambda: SpeculativeLog(tmp_path / "log"))
+        for i in range(5):
+            off, h = log.append(f"e{i}".encode())
+            assert off == i
+        assert log.StartAction(None)
+        assert log.wait_durable(timeout=5.0)
+        log.EndAction()
+        log2 = c.kill("log")
+        entries, _ = log2.scan(0)
+        assert [d for _, d in entries] == [f"e{i}".encode() for i in range(5)]
+
+    def test_speculative_entries_lost_on_crash(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        log = c.add("log", lambda: SpeculativeLog(tmp_path / "slog"))
+        log.append(b"volatile")
+        log2 = c.kill("log")
+        entries, _ = log2.scan(0)
+        assert entries == []  # speculative appends rolled back
+
+    def test_consumed_entries_skip_storage(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        log = c.add("log", lambda: SpeculativeLog(tmp_path / "plog"))
+        for i in range(10):
+            log.append(f"evt{i}".encode())
+        # a consumer acked the first 8 before any flush happened
+        log.truncate_consumed(8)
+        log.runtime.maybe_persist(force=True)
+        time.sleep(0.05)
+        assert log.core.entries_skipped == 8
+        # survivors are still durable and holes read as pruned
+        log.core.drop_memory()
+        log.core.restore(1)
+        assert [d for _, d in log.core.scan(0)] == [b"evt8", b"evt9"]
+
+    def test_restore_fast_path_truncates_in_memory(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        log = c.add("log", lambda: SpeculativeLog(tmp_path / "flog"))
+        log.append(b"a")
+        log.runtime.maybe_persist(force=True)
+        time.sleep(0.03)
+        log.append(b"b")  # speculative
+        meta = log.core.restore(1)  # roll back in memory
+        assert [d for _, d in log.core.scan(0)] == [b"a"]
+        assert isinstance(meta, bytes)
+
+
+# --------------------------------------------------------------------------- #
+# KV store                                                                     #
+# --------------------------------------------------------------------------- #
+class TestKVStore:
+    def test_put_get_and_reserve(self, cluster_factory, tmp_path):
+        c = cluster_factory(group_commit_interval=0.005)
+        kv = c.add("kv", lambda: SpeculativeKVStore(tmp_path / "kv"))
+        kv.stock("hotel", 2)
+        ok, _ = kv.try_reserve("hotel", "wf1")
+        assert ok
+        ok, _ = kv.try_reserve("hotel", "wf2")
+        assert ok
+        ok, _ = kv.try_reserve("hotel", "wf3")
+        assert not ok  # sold out
+        kv.release("hotel", "wf1")
+        ok, _ = kv.try_reserve("hotel", "wf3")
+        assert ok
+
+    def test_speculative_reservation_rolls_back(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        kv = c.add("kv", lambda: SpeculativeKVStore(tmp_path / "rkv"))
+        kv.stock("car", 1)
+        assert kv.StartAction(None)
+        assert kv.wait_durable(timeout=5.0)  # stock survives
+        kv.EndAction()
+        kv.try_reserve("car", "wfX")  # speculative
+        kv2 = c.kill("kv")
+        c.refresh_all()
+        v, _ = kv2.get("inv:car")
+        assert v == "1"  # reservation was rolled back with the crash
+
+
+# --------------------------------------------------------------------------- #
+# workflow engine (TravelReservations, paper Fig. 9)                           #
+# --------------------------------------------------------------------------- #
+def _mk_travel(cluster, tmp_path, speculative=True, n_services=3):
+    names = [f"svc{i}" for i in range(n_services)]
+    kvs = []
+    for n in names:
+        kv = cluster.add(n, (lambda n=n: SpeculativeKVStore(tmp_path / f"kv_{n}")))
+        kv.stock("item", 100)
+        kvs.append(kv)
+    wf = cluster.add(
+        "wf", lambda: WorkflowEngine(tmp_path / "wf", speculative=speculative)
+    )
+    return wf, kvs
+
+
+def _steps(kvs, wf_id):
+    return [
+        (lambda hdr, kv=kv: kv.try_reserve("item", wf_id, hdr)) for kv in kvs
+    ]
+
+
+class TestWorkflow:
+    def test_travel_reservation_completes(self, cluster_factory, tmp_path):
+        c = cluster_factory(group_commit_interval=0.005)
+        wf, kvs = _mk_travel(c, tmp_path)
+        out = wf.run_workflow("wf1", _steps(kvs, "wf1"))
+        assert out is not None
+        results, _ = out
+        assert results == [True, True, True]
+        assert wf.workflow_state("wf1")["status"] == "done"
+
+    def test_baseline_mode_also_completes(self, cluster_factory, tmp_path):
+        c = cluster_factory(group_commit_interval=0.005)
+        wf, kvs = _mk_travel(c, tmp_path, speculative=False)
+        out = wf.run_workflow("wf1", _steps(kvs, "wf1"))
+        assert out is not None
+
+    def test_crash_rolls_back_and_resumes_consistently(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        wf, kvs = _mk_travel(c, tmp_path)
+        # make stock durable first so rollback targets stock=100
+        for i, kv in enumerate(kvs):
+            assert kv.StartAction(None)
+            assert kv.wait_durable(timeout=5.0)
+            kv.EndAction()
+
+        # run the workflow WITHOUT the external barrier so it stays speculative
+        out = wf.run_workflow("wf2", _steps(kvs, "wf2"), external=False)
+        assert out is not None
+        # now crash the middle service before anything else persists
+        kv1 = c.kill("svc1")
+        c.refresh_all()
+        # the workflow engine consumed svc1's speculative state => rolled back
+        st = wf.workflow_state("wf2")
+        assert st is None or st["step"] < 3 or wf.runtime.world == 1
+        # all reservations from the dead run must be gone everywhere
+        for kv in [kvs[0], kv1, kvs[2]]:
+            live = c.get(["svc0", "svc1", "svc2"][[kvs[0], kv1, kvs[2]].index(kv)])
+            v, _ = live.get("inv:item")
+            assert v == "100"
+        # driver resumes: full re-execution yields a consistent final state
+        # (external=False: no barrier — this cluster has no refresher thread)
+        out = wf.run_workflow(
+            "wf2", _steps([c.get(n) for n in ("svc0", "svc1", "svc2")], "wf2"),
+            external=False,
+        )
+        assert out is not None
+        for n in ("svc0", "svc1", "svc2"):
+            v, _ = c.get(n).get("inv:item")
+            assert v == "99"
+
+
+# --------------------------------------------------------------------------- #
+# event broker                                                                 #
+# --------------------------------------------------------------------------- #
+class TestBroker:
+    def test_produce_consume_ack(self, cluster_factory, tmp_path):
+        c = cluster_factory(group_commit_interval=0.005)
+        br = c.add("br", lambda: EventBroker(tmp_path / "br", topics=["t0"]))
+        offs, h = br.produce("t0", [b"a", b"b", b"c"])
+        assert offs == [0, 1, 2]
+        evts, h2 = br.consume("g", "t0", header=h)
+        assert [d for _, d in evts] == [b"a", b"b", b"c"]
+        br.ack("g", "t0", upto=2, header=h2)
+        evts, _ = br.consume("g", "t0")
+        assert evts == []  # offset advanced
+
+    def test_acked_events_skip_storage(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        br = c.add("br", lambda: EventBroker(tmp_path / "br2", topics=["t0"]))
+        _, h = br.produce("t0", [f"e{i}".encode() for i in range(20)])
+        evts, h2 = br.consume("g", "t0", max_n=20, header=h)
+        br.ack("g", "t0", upto=19, header=h2)
+        br.runtime.maybe_persist(force=True)
+        time.sleep(0.05)
+        assert br.entries_skipped() == 20  # never reached storage (Fig. 10)
+
+    def test_exactly_once_across_rollback(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        br = c.add("br", lambda: EventBroker(tmp_path / "br3", topics=["t0"]))
+        _, h = br.produce("t0", [b"x"])
+        # consumer processes speculatively but broker crashes before persist
+        evts, h2 = br.consume("g", "t0", header=h)
+        assert len(evts) == 1
+        br2 = c.kill("br")
+        c.refresh_all()
+        # event is gone (its production was speculative) — and so is the
+        # consumer offset: a re-produce is consumed exactly once.
+        _, h = br2.produce("t0", [b"x"])
+        evts, h2 = br2.consume("g", "t0", header=h)
+        assert [d for _, d in evts] == [b"x"]
+        br2.ack("g", "t0", 0, header=h2)
+        evts, _ = br2.consume("g", "t0")
+        assert evts == []
+
+
+# --------------------------------------------------------------------------- #
+# two-phase commit (paper Fig. 11)                                             #
+# --------------------------------------------------------------------------- #
+class TestTwoPC:
+    @pytest.mark.parametrize("speculative", [True, False])
+    def test_commit_succeeds(self, cluster_factory, tmp_path, speculative):
+        c = cluster_factory(group_commit_interval=0.005)
+        parts = [
+            c.add(
+                f"p{i}",
+                (lambda i=i: TwoPCParticipant(tmp_path / f"p{i}", speculative=speculative)),
+            )
+            for i in range(4)
+        ]
+        coord = c.add(
+            "coord", lambda: TwoPCCoordinator(tmp_path / "coord", speculative=speculative)
+        )
+        client = TwoPCClient(coord, parts)
+        assert client.run("txn1") is True
+
+    def test_lost_start_record_aborts(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        parts = [
+            c.add(f"p{i}", (lambda i=i: TwoPCParticipant(tmp_path / f"ap{i}")))
+            for i in range(2)
+        ]
+        coord = c.add("coord", lambda: TwoPCCoordinator(tmp_path / "acoord"))
+        # client writes start records (speculative), then p0 crashes
+        for p in parts:
+            p.txn_start("txnA")
+        c.kill("p0")
+        c.refresh_all()
+        parts = [c.get("p0"), c.get("p1")]
+        # prepare: p0 lost the start record => votes no => abort
+        out0 = parts[0].prepare("txnA")
+        assert out0 is not None and out0[0] is False

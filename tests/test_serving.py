@@ -1,0 +1,36 @@
+"""Speculative serving loop: derived-state (KV cache) recovery. A crashed
+session restores its durable token prefix and REBUILDS the cache by
+replay; continued greedy decoding is deterministic, so the final durable
+stream equals the failure-free stream."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params, param_descs
+from repro.train.serve import run_speculative_serving
+
+CFG = get_config("gemma_2b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(param_descs(CFG), jax.random.key(0), jnp.float32)
+
+
+def test_serving_generates_and_exports_durable(tmp_path, params):
+    res = run_speculative_serving(tmp_path / "s", CFG, params, n_tokens=8)
+    assert res.tokens_generated == 8
+    assert res.durable_tokens[: res.tokens_generated]  # barrier-gated export
+
+
+def test_serving_failure_equals_failure_free(tmp_path, params):
+    base = run_speculative_serving(tmp_path / "b", CFG, params, n_tokens=10)
+    inj = run_speculative_serving(
+        tmp_path / "i", CFG, params, n_tokens=10, kill_at=5
+    )
+    assert inj.rollbacks == 1
+    # derived-state recovery: same deterministic token stream
+    assert inj.durable_tokens == base.durable_tokens
