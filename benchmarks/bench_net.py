@@ -1,0 +1,109 @@
+"""Transport fabric + sharded coordinator microbenchmark (repro.net).
+
+Compares service-call throughput for:
+
+* ``direct``        — LocalCluster, in-process calls (the seed's transport)
+* ``net-shard<N>``  — NetCluster over SimTransport with batched delivery and
+                      an N-shard coordinator (N in {1, 2, 4})
+
+Concurrent clients drive round-robin increments across K counter SOs, so
+messages queue and the fabric's batch coalescing is visible (mean_batch).
+Reported per config: ops/s, mean delivered batch size, wire bytes/op.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.core import LocalCluster
+from repro.net import LinkSpec, NetCluster, SimTransport
+from repro.services.counter import CounterStateObject
+
+from .common import emit
+
+
+def _drive(cluster, so_ids, total_ops: int, threads: int, via_transport: bool) -> float:
+    """Round-robin increments from concurrent clients; returns wall seconds."""
+    errs = []
+
+    def worker(tid: int, n_ops: int) -> None:
+        try:
+            for i in range(n_ops):
+                so_id = so_ids[(tid + i) % len(so_ids)]
+                if via_transport:
+                    cluster.send(None, so_id, "increment", None)
+                else:
+                    cluster.get(so_id).increment(None)
+        except Exception as e:  # pragma: no cover - surfaced below
+            errs.append(e)
+
+    per = total_ops // threads
+    ts = [threading.Thread(target=worker, args=(t, per)) for t in range(threads)]
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    return wall
+
+
+def run(quick: bool = True, csv_path=None) -> None:
+    total_ops = 240 if quick else 2400
+    threads = 8
+    n_sos = 4
+    rows = []
+
+    with tempfile.TemporaryDirectory() as td:
+        root = Path(td)
+
+        # -- direct (seed transport) ------------------------------------- #
+        c = LocalCluster(root / "direct", group_commit_interval=0.01)
+        ids = [f"so{i}" for i in range(n_sos)]
+        for so_id in ids:
+            c.add(so_id, (lambda p: (lambda: CounterStateObject(p)))(root / f"d_{so_id}"))
+        wall = _drive(c, ids, total_ops, threads, via_transport=False)
+        c.shutdown()
+        rows.append({"name": "net_direct", "ops_per_s": total_ops / wall})
+
+        # -- transport-batched, sharded coordinator ----------------------- #
+        for shards in (1, 2, 4):
+            tr = SimTransport(
+                seed=0,
+                default_link=LinkSpec(latency_ms=0.2, jitter_ms=0.1),
+                batch_size=64,
+                retry_timeout=0.05,
+            )
+            c = NetCluster(
+                root / f"net{shards}",
+                transport=tr,
+                n_shards=shards,
+                group_commit_interval=0.01,
+            )
+            for so_id in ids:
+                c.add(
+                    so_id,
+                    (lambda p: (lambda: CounterStateObject(p)))(root / f"n{shards}_{so_id}"),
+                )
+            wall = _drive(c, ids, total_ops, threads, via_transport=True)
+            st = c.transport.stats()
+            c.shutdown()
+            rows.append(
+                {
+                    "name": f"net_shard{shards}",
+                    "ops_per_s": total_ops / wall,
+                    "mean_batch": round(st["mean_batch"], 2),
+                    "wire_bytes_per_op": round(st["bytes"] / total_ops, 1),
+                    "retries": st["retries"],
+                }
+            )
+
+    emit(rows, csv_path)
+
+
+if __name__ == "__main__":
+    run(quick=True)

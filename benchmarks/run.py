@@ -18,6 +18,7 @@ SUITES = [
     ("instrumentation", "bench_instrumentation", "paper Fig. 14"),
     ("primitives", "bench_primitives", "paper Fig. 15"),
     ("training", "bench_training_dse", "beyond-paper: DSE training loop"),
+    ("net", "bench_net", "beyond-paper: transport fabric + sharded coordinator"),
 ]
 
 

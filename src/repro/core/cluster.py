@@ -38,7 +38,7 @@ class LocalCluster:
     ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
-        self.coordinator = Coordinator(self.root / "coordinator.jsonl")
+        self.coordinator = self._make_coordinator()
         self._defaults = dict(
             group_commit_interval=group_commit_interval,
             strict_commit_ordering=strict_commit_ordering,
@@ -58,6 +58,19 @@ class LocalCluster:
             self._refresher.start()
 
     # ------------------------------------------------------------------ #
+    # deployment hooks (overridden by repro.net.NetCluster)              #
+    # ------------------------------------------------------------------ #
+    def _make_coordinator(self):
+        """Build (or rebuild, after restart_coordinator) the coordinator."""
+        return Coordinator(self.root / "coordinator.jsonl")
+
+    def _coordinator_handle(self, so_id: str):
+        """The coordinator handle a StateObject's runtime talks to. The base
+        cluster hands out the coordinator object itself (direct in-process
+        calls); NetCluster hands out a transport-backed proxy."""
+        return self.coordinator
+
+    # ------------------------------------------------------------------ #
     # membership                                                         #
     # ------------------------------------------------------------------ #
     def add(self, so_id: str, factory: Callable[[], StateObject], **overrides) -> StateObject:
@@ -66,7 +79,7 @@ class LocalCluster:
         so = factory()
         cfg = DSEConfig(
             so_id=so_id,
-            coordinator=self.coordinator,
+            coordinator=self._coordinator_handle(so_id),
             **{**self._defaults, **overrides},
         )
         so.Connect(cfg)
@@ -107,7 +120,7 @@ class LocalCluster:
         so = self._factories[so_id]()
         cfg = DSEConfig(
             so_id=so_id,
-            coordinator=self.coordinator,
+            coordinator=self._coordinator_handle(so_id),
             **{**self._defaults, **self._overrides.get(so_id, {})},
         )
         so.Connect(cfg)
@@ -120,9 +133,9 @@ class LocalCluster:
         the durable log and collects fragments from every participant."""
         with self._lock:
             old = self.coordinator
-            self.coordinator = Coordinator(self.root / "coordinator.jsonl")
+            self.coordinator = self._make_coordinator()
             for so in self._sos.values():
-                so.runtime.coordinator = self.coordinator
+                so.runtime.coordinator = self._coordinator_handle(so.runtime.so_id)
         old.close()
 
     # ------------------------------------------------------------------ #
@@ -135,12 +148,21 @@ class LocalCluster:
         for so in sos:
             try:
                 so.Refresh()
-            except CrashedError:
+            except (CrashedError, TimeoutError):
+                # TimeoutError: the transport fabric dropped this round's
+                # coordinator RPCs (loss / partition); retry next round.
                 pass
 
     def _refresh_loop(self, interval: float) -> None:
         while not self._stop.is_set():
-            self.refresh_all()
+            try:
+                self.refresh_all()
+            except Exception:
+                # The background refresher must survive anything a faulty
+                # fabric or a mid-restart incarnation throws; a dead refresher
+                # silently freezes the boundary and undelivers decisions.
+                # (Manual refresh_all still surfaces unexpected errors.)
+                pass
             self._stop.wait(interval)
 
     # ------------------------------------------------------------------ #

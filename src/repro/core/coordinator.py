@@ -117,6 +117,9 @@ class Coordinator:
         # If members existed, this is a restarted coordinator: the graph view
         # must be rebuilt from participants before boundaries can be served.
         self._awaiting: Set[str] = set(self._members)
+        #: lock-free mirror of ``bool(self._awaiting)`` (read by the sharded
+        #: DecisionBus without taking this coordinator's lock).
+        self.is_awaiting = bool(self._awaiting)
         for so in self._members:
             self._graph.add_member(so)
 
@@ -140,16 +143,52 @@ class Coordinator:
     def _boundary(self) -> Optional[Dict[str, int]]:
         """Current recoverable boundary, or None while the view is incomplete
         (coordinator recovery in progress)."""
-        if self._awaiting:
-            return None
-        if self._dirty:
-            self._boundary_cache = self._graph.recoverable_boundary()
-            # Vertices inside the boundary are immortal: prune their dep
-            # lists, keeping only the floor watermark (memory bound).
-            for so, b in self._boundary_cache.items():
-                self._graph.prune(so, b)
-            self._dirty = False
-        return dict(self._boundary_cache)
+        with self._lock:
+            if self._awaiting:
+                return None
+            if self._dirty:
+                self._boundary_cache = self._graph.recoverable_boundary()
+                # Vertices inside the boundary are immortal: prune their dep
+                # lists, keeping only the floor watermark (memory bound).
+                for so, b in self._boundary_cache.items():
+                    self._graph.prune(so, b)
+                self._dirty = False
+            return dict(self._boundary_cache)
+
+    def _awaiting_changed(self) -> None:
+        self.is_awaiting = bool(self._awaiting)
+
+    # Hooks a sharded deployment overrides to merge per-shard state into the
+    # single global view (repro.net.sharded.CoordinatorShard). They must be
+    # called WITHOUT self._lock held: the sharded variants reach across
+    # shards, and holding one shard's lock while acquiring another's would
+    # deadlock under concurrent failures.
+    def _world(self) -> int:
+        with self._lock:
+            return self._fsn
+
+    def _all_decisions(self) -> List[RollbackDecision]:
+        with self._lock:
+            return list(self._decisions)
+
+    def _decide(self, so_id: str, surviving: int) -> RollbackDecision:
+        """Compute, durably log, and apply a rollback decision."""
+        with self._lock:
+            # Remove the failed SO's lost vertices, then find the greatest
+            # closure of what remains (iteratively removing dangling refs).
+            self._graph.truncate(so_id, surviving)
+            targets = self._graph.rollback_targets(so_id, surviving)
+            fsn = self._fsn + 1
+            decision = RollbackDecision(fsn=fsn, failed=so_id, targets=targets)
+            # Consensus step: the decision must be durable before any
+            # participant can observe it (paper §4.3, Orchestrating Rollback).
+            self._log.append({"type": "decision", **decision.to_json()})
+            self._fsn = fsn
+            self._decisions.append(decision)
+            for so, t in targets.items():
+                self._graph.truncate(so, t)
+            self._dirty = True
+            return decision
 
     def _wait_recovered(self, exclude: Set[str]) -> None:
         deadline = None
@@ -177,62 +216,69 @@ class Coordinator:
         """
         with self._lock:
             self._ingest(fragments)
-            if so_id in self._members:
-                # -- failure path -------------------------------------------------
+            is_failure = so_id in self._members
+            if is_failure:
                 self._awaiting.discard(so_id)  # its fragments just arrived in full
+                self._awaiting_changed()
                 self._recovered_cv.notify_all()
-                # Rollback targets on an incomplete view would erase innocent
-                # members; wait until every other participant has resent.
+            else:
+                self._log.append({"type": "member", "so_id": so_id})
+                self._members.add(so_id)
+                self._graph.add_member(so_id)
+
+        if is_failure:
+            # -- failure path ---------------------------------------------------
+            # Rollback targets on an incomplete view would erase innocent
+            # members; wait until every other participant has resent.
+            with self._lock:
                 self._wait_recovered(exclude={so_id})
-
-                valid = [
-                    r.vertex.version
-                    for r in fragments
-                    if r.vertex.so_id == so_id
-                    and not vertex_rolled_back(r.vertex, self._decisions)
-                ]
-                surviving = max(valid, default=-1)
-                # Remove the failed SO's lost vertices, then find the greatest
-                # closure of what remains (iteratively removing dangling refs).
-                self._graph.truncate(so_id, surviving)
-                targets = self._graph.rollback_targets(so_id, surviving)
-                fsn = self._fsn + 1
-                decision = RollbackDecision(fsn=fsn, failed=so_id, targets=targets)
-                # Consensus step: the decision must be durable before any
-                # participant can observe it (paper §4.3, Orchestrating Rollback).
-                self._log.append({"type": "decision", **decision.to_json()})
-                self._fsn = fsn
-                self._decisions.append(decision)
-                for so, t in targets.items():
-                    self._graph.truncate(so, t)
-                self._dirty = True
-                restore_to = targets.get(so_id, -1)
-                return ConnectResponse(
-                    world=self._fsn,
-                    decisions=list(self._decisions),
-                    boundary=self._boundary(),
-                    restore_to=(restore_to if restore_to >= 0 else None),
-                )
-
-            # -- first connect ---------------------------------------------------
-            self._log.append({"type": "member", "so_id": so_id})
-            self._members.add(so_id)
-            self._graph.add_member(so_id)
+            # Snapshot decisions only AFTER the wait: a decision landing
+            # during the (up to recovery_timeout) window must filter `valid`.
+            decisions = self._all_decisions()
             valid = [
                 r.vertex.version
                 for r in fragments
-                if r.vertex.so_id == so_id
-                and not vertex_rolled_back(r.vertex, self._decisions)
+                if r.vertex.so_id == so_id and not vertex_rolled_back(r.vertex, decisions)
             ]
-            # Adoption: an unknown member with durable state (e.g. a fresh
-            # coordinator log) resumes from its own latest valid version.
-            restore_to = max(valid) if valid else None
+            surviving = max(valid, default=-1)
+            decision = self._decide(so_id, surviving)
+            restore_to = decision.targets.get(so_id, -1)
+            restore_to = restore_to if restore_to >= 0 else None
+            # world must be OUR decision's fsn, not a fresh read: a decision
+            # concurrent with the post-_decide window would otherwise ship as
+            # world while restore_to predates it — the runtime would set
+            # world past its fsn and never apply it. Later decisions in the
+            # (fresh) decision list are applied via poll, which is safe.
             return ConnectResponse(
-                world=self._fsn,
-                decisions=list(self._decisions),
+                world=decision.fsn,
+                decisions=self._all_decisions(),
                 boundary=self._boundary(),
                 restore_to=restore_to,
             )
+
+        # -- first connect ------------------------------------------------------
+        # Read world BEFORE decisions: a decision landing between the two
+        # reads is then included in `decisions` (filtering `valid`) while
+        # `world` predates it, so the runtime still applies it via poll.
+        # The unsafe order (fresh world, stale decisions) could adopt a
+        # version that decision just invalidated, with world already past
+        # its fsn — never applied, permanently wrong state.
+        world = self._world()
+        decisions = self._all_decisions()
+        valid = [
+            r.vertex.version
+            for r in fragments
+            if r.vertex.so_id == so_id and not vertex_rolled_back(r.vertex, decisions)
+        ]
+        # Adoption: an unknown member with durable state (e.g. a fresh
+        # coordinator log) resumes from its own latest valid version.
+        restore_to = max(valid) if valid else None
+        return ConnectResponse(
+            world=world,
+            decisions=decisions,
+            boundary=self._boundary(),
+            restore_to=restore_to,
+        )
 
     def report(self, so_id: str, reports: Sequence[PersistReport]) -> None:
         with self._lock:
@@ -243,23 +289,24 @@ class Coordinator:
         with self._lock:
             self._ingest(fragments)
             self._awaiting.discard(so_id)
+            self._awaiting_changed()
             self._recovered_cv.notify_all()
             self._dirty = True
 
     def poll(self, so_id: str, known_world: int) -> PollResponse:
         with self._lock:
-            return PollResponse(
-                decisions=[d for d in self._decisions if d.fsn > known_world],
-                boundary=self._boundary(),
-                resend_fragments=so_id in self._awaiting,
-            )
+            resend = so_id in self._awaiting
+        return PollResponse(
+            decisions=[d for d in self._all_decisions() if d.fsn > known_world],
+            boundary=self._boundary(),
+            resend_fragments=resend,
+        )
 
     # ------------------------------------------------------------------ #
     # introspection                                                      #
     # ------------------------------------------------------------------ #
     def current_boundary(self) -> Optional[Dict[str, int]]:
-        with self._lock:
-            return self._boundary()
+        return self._boundary()
 
     def stats(self) -> Dict[str, object]:
         with self._lock:

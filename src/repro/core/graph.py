@@ -62,6 +62,16 @@ class DependencyGraph:
                 bisect.insort(self._labels[so_id], version)
             self._deps[so_id][version] = list(deps)
 
+    def merge_from(self, other: "DependencyGraph") -> None:
+        """Absorb another graph's vertices (sharded-coordinator merge rule:
+        the global view is the union of per-shard fragments)."""
+        snap = other.snapshot()
+        with self._lock:
+            for so, per in snap.items():
+                self.add_member(so)
+                for v, deps in per.items():
+                    self.report_persistent(so, v, deps)
+
     def truncate(self, so_id: str, keep_upto: int) -> None:
         """Drop vertices of ``so_id`` with version > keep_upto (rollback)."""
         with self._lock:
@@ -102,7 +112,9 @@ class DependencyGraph:
 
     # -- fixpoints ---------------------------------------------------------------
     def recoverable_boundary(
-        self, committed_override: Optional[Mapping[str, int]] = None
+        self,
+        committed_override: Optional[Mapping[str, int]] = None,
+        external: Optional[Mapping[str, int]] = None,
     ) -> Dict[str, int]:
         """Greatest closure of durable vertices, as per-SO version watermarks.
 
@@ -110,6 +122,12 @@ class DependencyGraph:
         (used by the rollback computation for the failed SO's surviving
         prefix). Returns ``{so_id: watermark}``; a watermark of -1 means
         "nothing recoverable yet" (version labels start at 0).
+
+        ``external`` supplies watermark estimates for SOs this graph does not
+        own (sharded deployment: each shard holds only its members' fragments,
+        and the global boundary is the fixpoint of per-shard boundaries under
+        exchanged estimates — see DESIGN.md §7). External SOs are never cut
+        by this graph; only this graph's members appear in the result.
         """
         with self._lock:
             bound: Dict[str, int] = {}
@@ -118,6 +136,9 @@ class DependencyGraph:
                 if committed_override and so in committed_override:
                     b = min(b, committed_override[so])
                 bound[so] = b
+            if external:
+                for so, w in external.items():
+                    bound.setdefault(so, w)
 
             changed = True
             while changed:
@@ -136,7 +157,7 @@ class DependencyGraph:
                                 break
                         if bound[so] < v:
                             break
-            return bound
+            return {so: b for so, b in bound.items() if so in self._labels}
 
     def snap_to_labels(self, watermarks: Mapping[str, int]) -> Dict[str, int]:
         """Snap each watermark down to the greatest persisted label <= it.

@@ -124,7 +124,14 @@ class DSERuntime:
         else:
             # Fresh StateObject: synchronously persist version 0.
             self._persist_now(force_label=0, synchronous=True)
-        self._flush_reports()
+        try:
+            self._flush_reports()
+        except Exception:
+            # Transport failure (partitioned/lossy fabric) must not abort the
+            # connect: the reports are requeued and the next Refresh retries
+            # them. Raising here would strand the cluster with the dead
+            # incarnation still registered (restart never completes).
+            pass
 
     def mark_dead(self) -> None:
         self._dead = True
@@ -240,7 +247,10 @@ class DSERuntime:
             except DelayMessage:
                 # The sthread observed a future failure epoch; catch up by
                 # applying pending decisions, then retry (Def 4.3 delay).
-                self.refresh()
+                try:
+                    self.refresh()
+                except TimeoutError:
+                    pass  # fabric hiccup: retry the catch-up next iteration
 
     # ------------------------------------------------------------------ #
     # persistence (group commit)                                         #
@@ -251,8 +261,6 @@ class DSERuntime:
         with self._mu:
             due = (now - self._last_persist) >= self.config.group_commit_interval
             if not force and not (due and self._dirty):
-                return None
-            if not self._dirty and not force:
                 return None
         return self._persist_now()
 
@@ -289,7 +297,10 @@ class DSERuntime:
             self._epoch.release_exclusive()
         if synchronous:
             done.wait()
-            self._flush_reports()
+            try:
+                self._flush_reports()
+            except Exception:
+                pass  # connect-time flush: requeued, retried next Refresh
         return label
 
     # ------------------------------------------------------------------ #
@@ -304,8 +315,17 @@ class DSERuntime:
     def _flush_reports(self) -> None:
         with self._mu:
             reports, self._report_queue = self._report_queue, []
-        if reports:
+        if not reports:
+            return
+        try:
             self.coordinator.report(self.so_id, reports)
+        except Exception:
+            # Transport failure (lossy / partitioned fabric): the coordinator
+            # never saw these fragments, so requeue them for the next Refresh
+            # round — silently dropping them would stall the boundary forever.
+            with self._mu:
+                self._report_queue = reports + self._report_queue
+            raise
 
     def _poll_coordinator(self) -> None:
         with self._mu:
@@ -371,6 +391,13 @@ class DSERuntime:
                     self._decisions.append(d)
             else:
                 assert target is not None
+                # A decision can assign -1 when our synchronous v0 report was
+                # still crossing the fabric when it was computed; our durable
+                # floor (the Connect-time snapshot, dependency-free) is always
+                # a safe restore point, so clamp up to it.
+                with self._mu:
+                    floor = self._labels[0] if self._labels else 0
+                target = max(target, floor)
                 self.so.Restore(target)
                 with self._mu:
                     self.world = d.fsn
@@ -409,8 +436,14 @@ class DSERuntime:
             with self._mu:
                 if all(self._boundary.get(dep.so_id, -1) >= dep.version for dep in deps):
                     return
-            self._flush_reports()
-            self._poll_coordinator()
+            try:
+                self._flush_reports()
+                self._poll_coordinator()
+            except TimeoutError:
+                # Transient fabric failure (partition/loss): transport errors
+                # are retryable everywhere else; only the barrier's OWN
+                # deadline below may raise TimeoutError to the caller.
+                pass
             with self._mu:
                 if all(self._boundary.get(dep.so_id, -1) >= dep.version for dep in deps):
                     return

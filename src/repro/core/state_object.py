@@ -180,9 +180,12 @@ class VersionStore:
         out: List[Tuple[int, bytes]] = []
         for p in sorted(self.root.glob("v*.blob")):
             version = int(p.stem[1:])
-            with open(p, "rb") as f:
-                mlen = int.from_bytes(f.read(8), "little")
-                metadata = f.read(mlen)
+            try:
+                with open(p, "rb") as f:
+                    mlen = int.from_bytes(f.read(8), "little")
+                    metadata = f.read(mlen)
+            except FileNotFoundError:
+                continue  # pruned concurrently (in-flight Refresh of a dying incarnation)
             out.append((version, metadata))
         return out
 

@@ -1,0 +1,7 @@
+"""Version shims for the Pallas TPU API."""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+# jax < 0.5 names this TPUCompilerParams; newer releases renamed it.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 
 def _encode_kernel(new_ref, prev_ref, code_ref, scale_ref):
     delta = new_ref[...].astype(jnp.float32) - prev_ref[...].astype(jnp.float32)
@@ -54,7 +56,7 @@ def delta_encode(
             jax.ShapeDtypeStruct((nb, blk), jnp.int8),
             jax.ShapeDtypeStruct((nb,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
@@ -80,7 +82,7 @@ def delta_decode(
         ],
         out_specs=pl.BlockSpec((1, blk), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, blk), dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -38,3 +38,18 @@ def make_counter(tmp_path: Path, name: str, io_ms: float = 0.0):
         return CounterSO(tmp_path / f"so_{name}", io_ms=io_ms)
 
     return factory
+
+
+def wait_committed(so, label: Optional[int], timeout: float = 5.0) -> bool:
+    """Deadline-poll until the async Persist IO for ``label`` has committed
+    (fixed sleeps race the IO thread on a loaded machine)."""
+    import time
+
+    if label is None:
+        return True
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if so.runtime.stats()["committed"] >= label:
+            return True
+        time.sleep(0.002)
+    return False

@@ -20,7 +20,7 @@ from repro.core import (
     Vertex,
 )
 
-from conftest import CounterSO, make_counter
+from conftest import CounterSO, make_counter, wait_committed
 
 
 # --------------------------------------------------------------------------- #
@@ -166,6 +166,37 @@ class TestCommitOrdering:
 
 
 # --------------------------------------------------------------------------- #
+# group commit (maybe_persist due/dirty/force semantics)                       #
+# --------------------------------------------------------------------------- #
+class TestGroupCommit:
+    def test_dirty_but_not_due_skips(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=999)
+        so = c.add("g", make_counter(tmp_path, "g"))
+        so.increment(None)
+        assert so.runtime.maybe_persist() is None  # dirty, interval not elapsed
+
+    def test_due_but_clean_skips(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=0.0)
+        so = c.add("g", make_counter(tmp_path, "g"))
+        # v0 was persisted at Connect and nothing has dirtied state since:
+        # an always-due interval alone must not trigger an empty persist.
+        assert so.runtime.maybe_persist() is None
+
+    def test_due_and_dirty_persists(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=0.0)
+        so = c.add("g", make_counter(tmp_path, "g"))
+        so.increment(None)
+        label = so.runtime.maybe_persist()
+        assert label is not None and label >= 1
+        assert so.runtime.maybe_persist() is None  # clean again afterwards
+
+    def test_force_persists_even_clean_and_not_due(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=999)
+        so = c.add("g", make_counter(tmp_path, "g"))
+        assert so.runtime.maybe_persist(force=True) is not None
+
+
+# --------------------------------------------------------------------------- #
 # rollback + message discard                                                   #
 # --------------------------------------------------------------------------- #
 class TestRollback:
@@ -211,6 +242,21 @@ class TestRollback:
         c.kill("p")
         c.refresh_all()
         assert q.value == 100             # inside the boundary: survives
+
+    def test_decision_targeting_unreported_v0_clamps_to_floor(
+        self, cluster_factory, tmp_path
+    ):
+        """A decision computed before our synchronous v0 report arrived can
+        assign target -1; the runtime must clamp to its durable floor (the
+        Connect-time snapshot) instead of attempting Restore(-1)."""
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        z = c.add("z", make_counter(tmp_path, "z"))
+        z.increment(None)
+        z.runtime._apply_decision(
+            RollbackDecision(fsn=1, failed="other", targets={"z": -1})
+        )
+        assert z.runtime.world == 1
+        assert z.value == 0  # restored to v0, not v-1
 
     def test_rolled_back_sthread_raises(self, cluster_factory, tmp_path):
         c = cluster_factory(refresh_interval=None, group_commit_interval=99)
@@ -274,9 +320,8 @@ class TestCoordinatorRecovery:
         q = c.add("q", make_counter(tmp_path, "cq"))
         _, h = p.increment(None)
         q.increment(h)
-        p.runtime.maybe_persist(force=True)
-        q.runtime.maybe_persist(force=True)
-        time.sleep(0.05)
+        assert wait_committed(p, p.runtime.maybe_persist(force=True))
+        assert wait_committed(q, q.runtime.maybe_persist(force=True))
         c.refresh_all()
         old_boundary = c.coordinator.current_boundary()
         assert old_boundary is not None

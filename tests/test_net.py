@@ -1,0 +1,188 @@
+"""Transport-fabric tests (repro.net.transport): RPC semantics, per-link
+fault injection (latency / loss / reorder / partition), exactly-once
+processing under at-least-once delivery, and batched delivery."""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core.sthread import DelayMessage
+from repro.net import DirectTransport, LinkSpec, SimTransport
+
+
+@pytest.fixture
+def sim():
+    transports = []
+
+    def make(**kw) -> SimTransport:
+        t = SimTransport(**kw)
+        transports.append(t)
+        return t
+
+    yield make
+    for t in transports:
+        t.close()
+
+
+class TestDirectTransport:
+    def test_rpc(self):
+        t = DirectTransport()
+        t.register("svc", lambda method, *a, **k: (method, a, k))
+        assert t.call("cli", "svc", "ping", 1, x=2) == ("ping", (1,), {"x": 2})
+
+    def test_delay_retry(self):
+        t = DirectTransport(delay_backoff=0.0)
+        attempts = []
+
+        def handler(method, *a, **k):
+            attempts.append(method)
+            if len(attempts) < 3:
+                raise DelayMessage()
+            return "caught-up"
+
+        t.register("svc", handler)
+        assert t.call("cli", "svc", "go") == "caught-up"
+        assert len(attempts) == 3
+
+
+class TestSimTransportRPC:
+    def test_roundtrip_and_latency(self, sim):
+        t = sim(default_link=LinkSpec(latency_ms=20.0))
+        t.register("svc", lambda method, *a, **k: sum(a))
+        t0 = time.monotonic()
+        assert t.call("cli", "svc", "add", 1, 2, 3) == 6
+        # request + reply each cross a 20 ms link
+        assert time.monotonic() - t0 >= 0.035
+
+    def test_handler_exception_propagates(self, sim):
+        t = sim()
+
+        def handler(method, *a, **k):
+            raise ValueError("boom")
+
+        t.register("svc", handler)
+        with pytest.raises(ValueError, match="boom"):
+            t.call("cli", "svc", "go")
+
+    def test_unknown_endpoint_times_out_not_hangs(self, sim):
+        t = sim(call_timeout=0.2)
+        from repro.net import TransportError
+
+        with pytest.raises(TransportError):
+            t.call("cli", "nobody", "go")
+
+    def test_delay_reply_is_not_cached(self, sim):
+        """A delayed message must be re-processed on retry (Def 4.3): the
+        dedup cache must not swallow the redelivery."""
+        t = sim(delay_backoff=0.0, retry_timeout=0.02)
+        invocations = []
+
+        def handler(method, *a, **k):
+            invocations.append(method)
+            if len(invocations) < 3:
+                raise DelayMessage()
+            return "ok"
+
+        t.register("svc", handler)
+        assert t.call("cli", "svc", "m") == "ok"
+        assert len(invocations) == 3
+
+
+class TestFaultInjection:
+    def test_exactly_once_processing_under_loss(self, sim):
+        """30% loss on requests AND replies: every call still returns, and
+        the handler's side effect lands exactly once per logical message."""
+        t = sim(
+            seed=42,
+            default_link=LinkSpec(latency_ms=0.1, loss_prob=0.3),
+            retry_timeout=0.01,
+            call_timeout=10.0,
+        )
+        state = {"count": 0}
+        mu = threading.Lock()
+
+        def handler(method, *a, **k):
+            with mu:
+                state["count"] += 1
+                return state["count"]
+
+        t.register("svc", handler)
+        n = 40
+        results = [t.call("cli", "svc", "inc") for _ in range(n)]
+        assert state["count"] == n  # retries never double-processed
+        assert sorted(results) == list(range(1, n + 1))
+        st = t.stats()
+        assert st["dropped_loss"] > 0 and st["retries"] > 0
+
+    def test_partition_drops_then_heals(self, sim):
+        t = sim(retry_timeout=0.01)
+        t.register("svc", lambda method, *a, **k: "pong")
+        t.partition({"svc"})
+        with pytest.raises(TimeoutError):
+            t.call("cli", "svc", "ping", timeout=0.15)
+        assert t.stats()["dropped_partition"] > 0
+        t.heal()
+        assert t.call("cli", "svc", "ping") == "pong"
+
+    def test_same_group_unaffected_by_partition(self, sim):
+        t = sim()
+        t.register("a", lambda method, *arg, **k: "from-a")
+        t.register("b", lambda method, *arg, **k: "from-b")
+        t.partition({"a", "cli"})
+        assert t.call("cli", "a", "x") == "from-a"  # same island
+        with pytest.raises(TimeoutError):
+            t.call("cli", "b", "x", timeout=0.15)  # across the cut
+
+    def test_reorder_overtakes(self, sim):
+        """A reordered message is overtaken by a later send on a fast link."""
+        t = sim()
+        t.set_link("slowpoke", "svc", latency_ms=0.0, reorder_prob=1.0, reorder_ms=50.0)
+        order = []
+        done = threading.Event()
+
+        def handler(method, *a, **k):
+            order.append(method)
+            if len(order) == 2:
+                done.set()
+            return None
+
+        t.register("svc", handler)
+        t.cast("slowpoke", "svc", "first")
+        t.cast("cli", "svc", "second")
+        assert done.wait(2.0)
+        assert order == ["second", "first"]
+
+
+class TestBatchedDelivery:
+    def test_messages_coalesce_into_batches(self, sim):
+        """Messages landing inside one latency window drain in one worker
+        wakeup (Netherite-style batching): far fewer batches than messages."""
+        t = sim(default_link=LinkSpec(latency_ms=30.0), batch_size=64)
+        n = 50
+        seen = []
+        done = threading.Event()
+
+        def handler(method, *a, **k):
+            seen.append(a[0])
+            if len(seen) == n:
+                done.set()
+            return None
+
+        t.register("svc", handler)
+        for i in range(n):
+            t.cast("cli", "svc", "m", i)
+        assert done.wait(5.0)
+        assert sorted(seen) == list(range(n))
+        st = t.stats()
+        assert st["delivered_msgs"] == n
+        assert st["delivered_batches"] <= n // 5  # strongly coalesced
+        assert st["mean_batch"] >= 5.0
+
+    def test_reregister_replaces_handler(self, sim):
+        t = sim()
+        t.register("svc", lambda method, *a, **k: "old")
+        assert t.call("cli", "svc", "x") == "old"
+        t.register("svc", lambda method, *a, **k: "new")  # restarted incarnation
+        assert t.call("cli", "svc", "x") == "new"

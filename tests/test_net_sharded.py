@@ -1,0 +1,284 @@
+"""Sharded-coordinator + NetCluster tests (repro.net.sharded / .cluster):
+
+* consistent-hash placement,
+* cross-shard boundary merge (per-shard fixpoint == global fixpoint),
+* decision broadcast replication to every shard log,
+* shard restart refusing boundaries until its members resend fragments,
+* coordinator restart + fragment resend over a lossy, laggy fabric
+  (delayed / resent fragments), and
+* the end-to-end acceptance scenario: recovery to a consistent boundary
+  with 2 coordinator shards while SimTransport injects message loss and a
+  healed partition.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import pytest
+
+from repro.core.ids import PersistReport, Vertex
+from repro.net import HashRing, LinkSpec, NetCluster, ShardedCoordinator, SimTransport
+
+from conftest import make_counter
+
+
+def distinct_shard_ids(sc_or_ring, base: str = "p") -> tuple:
+    """Two so_ids that consistent-hash to different shards."""
+    lookup = sc_or_ring.shard_index if hasattr(sc_or_ring, "shard_index") else sc_or_ring.lookup
+    first = f"{base}0"
+    home = lookup(first)
+    for i in range(1, 1000):
+        cand = f"{base}{i}"
+        if lookup(cand) != home:
+            return first, cand
+    raise AssertionError("ring maps everything to one shard")
+
+
+def rep(so: str, version: int, deps=()) -> PersistReport:
+    return PersistReport(Vertex(so, 0, version), tuple(Vertex(s, 0, v) for s, v in deps))
+
+
+def settle(predicate, cluster=None, timeout: float = 10.0, interval: float = 0.01):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cluster is not None:
+            cluster.refresh_all()
+        if predicate():
+            return True
+        time.sleep(interval)
+    return predicate()
+
+
+# --------------------------------------------------------------------------- #
+# consistent hashing                                                           #
+# --------------------------------------------------------------------------- #
+class TestHashRing:
+    def test_deterministic_across_instances(self):
+        a = HashRing([0, 1, 2, 3])
+        b = HashRing([0, 1, 2, 3])
+        keys = [f"so-{i}" for i in range(200)]
+        assert [a.lookup(k) for k in keys] == [b.lookup(k) for k in keys]
+
+    def test_spreads_over_all_nodes(self):
+        ring = HashRing([0, 1, 2, 3])
+        owners = {ring.lookup(f"so-{i}") for i in range(200)}
+        assert owners == {0, 1, 2, 3}
+
+    def test_adding_a_node_moves_few_keys(self):
+        keys = [f"so-{i}" for i in range(500)]
+        before = {k: HashRing([0, 1, 2]).lookup(k) for k in keys}
+        after = {k: HashRing([0, 1, 2, 3]).lookup(k) for k in keys}
+        moved = sum(1 for k in keys if before[k] != after[k])
+        # consistent hashing: ~1/4 of keys move, not ~3/4 (modulo would)
+        assert moved < len(keys) // 2
+
+
+# --------------------------------------------------------------------------- #
+# sharded coordinator (driven directly, no transport)                          #
+# --------------------------------------------------------------------------- #
+class TestShardedCoordinator:
+    def test_cross_shard_boundary_merge(self, tmp_path):
+        sc = ShardedCoordinator(tmp_path / "sc", n_shards=2)
+        p, q = distinct_shard_ids(sc)
+        sc.connect(p, [])
+        sc.connect(q, [])
+        sc.report(p, [rep(p, 0)])
+        sc.report(q, [rep(q, 0)])
+        assert sc.current_boundary() == {p: 0, q: 0}
+        # q@1 depends on p@1 which is not durable yet: the cross-shard
+        # fixpoint must keep q at 0 even though q's OWN shard has q@1.
+        sc.report(q, [rep(q, 1, deps=[(p, 1)])])
+        assert sc.current_boundary()[q] == 0
+        sc.report(p, [rep(p, 1)])
+        assert sc.current_boundary() == {p: 1, q: 1}
+        sc.close()
+
+    def test_decision_broadcast_replicated_to_every_shard_log(self, tmp_path):
+        sc = ShardedCoordinator(tmp_path / "sc", n_shards=3)
+        p, q = distinct_shard_ids(sc)
+        sc.connect(p, [])
+        sc.connect(q, [])
+        sc.report(p, [rep(p, 0)])
+        sc.report(q, [rep(q, 0), rep(q, 1, deps=[(p, 1)])])
+        # p fails having lost everything past v0: second connect => decision
+        resp = sc.connect(p, [rep(p, 0)])
+        assert resp.world == 1 and len(resp.decisions) == 1
+        assert resp.decisions[0].targets[q] == 0  # cross-shard rollback
+        for shard in sc.shards:
+            records = [
+                json.loads(line)
+                for line in (tmp_path / "sc" / f"shard{shard.shard_id}.jsonl").read_text().splitlines()
+            ]
+            fsns = [r["fsn"] for r in records if r.get("type") == "decision"]
+            assert fsns == [1], f"shard {shard.shard_id} missing the broadcast decision"
+        sc.close()
+
+    def test_shard_restart_refuses_boundary_until_members_resend(self, tmp_path):
+        sc = ShardedCoordinator(tmp_path / "sc", n_shards=2)
+        p, q = distinct_shard_ids(sc)
+        sc.connect(p, [])
+        sc.connect(q, [])
+        sc.report(p, [rep(p, 0)])
+        sc.report(q, [rep(q, 0)])
+        before = sc.current_boundary()
+        assert before is not None
+
+        idx = sc.shard_index(q)
+        sc.restart_shard(idx)
+        assert sc.current_boundary() is None  # incomplete view: refuse
+        assert sc.poll(q, 0).resend_fragments
+        assert not sc.poll(p, 0).resend_fragments  # other shard unaffected
+        sc.receive_fragments(q, [rep(q, 0)])
+        after = sc.current_boundary()
+        assert after is not None
+        for so, wm in before.items():
+            assert after[so] >= wm
+        sc.close()
+
+    def test_restarted_shard_catches_up_on_missed_decisions(self, tmp_path):
+        sc = ShardedCoordinator(tmp_path / "sc", n_shards=2)
+        p, q = distinct_shard_ids(sc)
+        sc.connect(p, [])
+        sc.connect(q, [])
+        sc.report(p, [rep(p, 0)])
+        sc.report(q, [rep(q, 0)])
+        sc.connect(p, [rep(p, 0)])  # decision fsn=1 while both shards live
+        # restart q's shard: replay must expose the decision (replicated log)
+        shard = sc.restart_shard(sc.shard_index(q))
+        assert [d.fsn for d in shard.replayed_decisions()] == [1]
+        sc.receive_fragments(q, [rep(q, 0)])
+        assert sc.poll(q, 0).decisions[0].fsn == 1
+        sc.close()
+
+
+# --------------------------------------------------------------------------- #
+# NetCluster over a faulty fabric                                              #
+# --------------------------------------------------------------------------- #
+class TestNetClusterRecovery:
+    def _cluster(self, tmp_path, link: LinkSpec, n_shards: int = 2, **kw) -> NetCluster:
+        transport = SimTransport(
+            seed=11, default_link=link, retry_timeout=0.01, call_timeout=3.0
+        )
+        kw.setdefault("refresh_interval", None)
+        kw.setdefault("group_commit_interval", 0.005)
+        return NetCluster(
+            tmp_path / "cluster", transport=transport, n_shards=n_shards, **kw
+        )
+
+    def test_coordinator_restart_fragment_resend_over_lossy_fabric(self, tmp_path):
+        """Satellite: a restarted (sharded) coordinator refuses boundary
+        queries until every participant has resent fragments — with the
+        resends themselves delayed, dropped, and retried by the fabric."""
+        link = LinkSpec(latency_ms=0.2, jitter_ms=0.5, loss_prob=0.15, reorder_prob=0.2)
+        c = self._cluster(tmp_path, link)
+        p_id, q_id = distinct_shard_ids(c.coordinator)
+        p = c.add(p_id, make_counter(tmp_path, "p"))
+        q = c.add(q_id, make_counter(tmp_path, "q"))
+        _, h = c.send(None, p_id, "increment", None)
+        c.send(None, q_id, "increment", h, by=5)
+        assert settle(
+            lambda: (c.coordinator.current_boundary() or {}).get(q_id, -1) >= 1,
+            cluster=c,
+        )
+        before = c.coordinator.current_boundary()
+
+        c.restart_coordinator()
+        assert c.coordinator.current_boundary() is None  # all shards recovering
+        # every poll answers resend_fragments=True until the (lossy, delayed,
+        # retried) fragment resends from BOTH participants arrive in full
+        assert settle(lambda: c.coordinator.current_boundary() is not None, cluster=c)
+        after = c.coordinator.current_boundary()
+        for so, wm in before.items():
+            assert after[so] >= wm, "recovered view must be at least as fresh"
+        c.shutdown()
+
+    def test_e2e_recovery_with_shards_loss_and_healed_partition(self, tmp_path):
+        """Acceptance scenario: 2 coordinator shards, lossy fabric, a
+        partition that cuts the coordinator off mid-workload and then heals,
+        and a producer crash — the cluster must converge to one world and a
+        consistent (consumer <= producer) recovered prefix, then keep
+        serving new traffic."""
+        link = LinkSpec(latency_ms=0.1, jitter_ms=0.3, loss_prob=0.05)
+        # background refresher drives report/poll over the fabric; a huge
+        # group-commit interval keeps persistence explicit so the partition-era
+        # increments are genuinely speculative (lost on crash).
+        c = self._cluster(
+            tmp_path, link, refresh_interval=0.005, group_commit_interval=99
+        )
+        assert c.coordinator.n_shards == 2
+        p_id, q_id = distinct_shard_ids(c.coordinator)
+        producer = c.add(p_id, make_counter(tmp_path, "prod"))
+        consumer = c.add(q_id, make_counter(tmp_path, "cons"))
+
+        # durable prefix: 3 mirrored increments, persisted and barriered
+        # into the global (cross-shard) boundary
+        h = None
+        for _ in range(3):
+            _, h = c.send(None, p_id, "increment", None)
+            c.send(None, q_id, "increment", h)
+        producer.runtime.maybe_persist(force=True)
+        t = consumer.Detach()
+        t.Barrier(timeout=20.0)
+        assert consumer.Merge(t)
+        consumer.EndAction()
+        durable_consumer = consumer.value
+        assert durable_consumer == 3
+
+        # partition the coordinator away; speculative traffic continues
+        c.transport.partition({f"coord/{i}" for i in range(2)})
+        for _ in range(2):
+            _, h = c.send(None, p_id, "increment", None)
+            c.send(None, q_id, "increment", h)
+        assert consumer.value == 5  # speculative, not yet durable
+        c.transport.heal()
+
+        # producer crashes, losing its un-persisted tail
+        c.kill(p_id)
+        assert settle(lambda: c.get(q_id).runtime.world >= 1, cluster=c)
+
+        new_consumer = c.get(q_id)
+        new_producer = c.get(p_id)
+        assert new_consumer.runtime.world == new_producer.runtime.world
+        # consistent prefix: the consumer's state derives from the producer's,
+        # so it must never be ahead of what the producer recovered
+        assert new_consumer.value <= new_producer.value
+        # the durable (barriered) prefix must have survived the crash
+        assert new_producer.value >= 3
+        assert new_consumer.value >= 3
+
+        # global boundary converges for both shards' members
+        assert settle(
+            lambda: all(
+                (c.coordinator.current_boundary() or {}).get(so, -1) >= 0
+                for so in (p_id, q_id)
+            ),
+            cluster=c,
+        )
+
+        # cluster still serves traffic in the new epoch
+        _, h2 = c.send(None, p_id, "increment", None)
+        res = c.send(None, q_id, "increment", h2)
+        assert res is not None
+        st = c.transport.stats()
+        assert st["dropped_loss"] > 0 and st["dropped_partition"] > 0
+        c.shutdown()
+
+    def test_service_traffic_exactly_once_under_loss(self, tmp_path):
+        """services/* must pass under injected faults: every lossy RPC lands
+        exactly once in the KV store's state."""
+        from repro.services.kv_store import SpeculativeKVStore
+
+        link = LinkSpec(latency_ms=0.1, loss_prob=0.2)
+        c = self._cluster(tmp_path, link, n_shards=2)
+        c.add("kv", lambda: SpeculativeKVStore(tmp_path / "kv"))
+        c.add("ctr", make_counter(tmp_path, "ctr"))
+        total = 20
+        h = None
+        for i in range(total):
+            v, h = c.send(None, "ctr", "increment", h)
+        assert v == total  # retries never double-incremented
+        c.send(None, "kv", "put", "k", "v1", h)
+        got = c.send(None, "kv", "get", "k", h)
+        assert got[0] == "v1"
+        c.shutdown()

@@ -11,6 +11,8 @@ recovers to a causally-consistent prefix:
 from __future__ import annotations
 
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

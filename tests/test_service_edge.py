@@ -5,6 +5,8 @@ from __future__ import annotations
 import time
 
 from repro.core import Coordinator, LocalCluster
+
+from conftest import wait_committed
 from repro.services import EventBroker, SpeculativeKVStore, SpeculativeLog, WorkflowEngine
 
 
@@ -31,8 +33,7 @@ class TestBrokerPartitions:
         e2, h2 = br.consume("slow", "t", max_n=2, header=h)
         br.ack("fast", "t", 3, header=h1)
         br.ack("slow", "t", 1, header=h2)
-        br.runtime.maybe_persist(force=True)
-        time.sleep(0.05)
+        assert wait_committed(br, br.runtime.maybe_persist(force=True))
         # only the prefix ACKED by BOTH groups skipped storage
         assert br.entries_skipped() == 2
         # and the slow group can still read its unacked events

@@ -6,6 +6,8 @@ import time
 import pytest
 
 from repro.core import Header
+
+from conftest import wait_committed
 from repro.services import (
     EventBroker,
     SpeculativeKVStore,
@@ -49,8 +51,7 @@ class TestSpeculativeLog:
             log.append(f"evt{i}".encode())
         # a consumer acked the first 8 before any flush happened
         log.truncate_consumed(8)
-        log.runtime.maybe_persist(force=True)
-        time.sleep(0.05)
+        assert wait_committed(log, log.runtime.maybe_persist(force=True))
         assert log.core.entries_skipped == 8
         # survivors are still durable and holes read as pruned
         log.core.drop_memory()
@@ -195,8 +196,7 @@ class TestBroker:
         _, h = br.produce("t0", [f"e{i}".encode() for i in range(20)])
         evts, h2 = br.consume("g", "t0", max_n=20, header=h)
         br.ack("g", "t0", upto=19, header=h2)
-        br.runtime.maybe_persist(force=True)
-        time.sleep(0.05)
+        assert wait_committed(br, br.runtime.maybe_persist(force=True))
         assert br.entries_skipped() == 20  # never reached storage (Fig. 10)
 
     def test_exactly_once_across_rollback(self, cluster_factory, tmp_path):
