@@ -1,0 +1,119 @@
+"""Simulation-scheduler overhead (beyond-paper: repro.sim, DESIGN.md §8).
+
+The deterministic scheduler context-switches real OS threads one at a time,
+so its hand-off cost bounds how many fault scenarios a sweep can afford.
+Reported as simulated **events/sec** on three workloads:
+
+* ``sched_pingpong`` — two tasks alternating through a SimEvent: pure
+  hand-off cost, no time advance;
+* ``sched_sleepstorm`` — many tasks sleeping staggered virtual durations:
+  time-jump (deadline heap) throughput, plus the virtual-seconds-per-
+  wall-second speedup that makes 60-virtual-second tests run in wall
+  milliseconds;
+* ``sim_full_stack`` — the explore ``counter`` scenario end-to-end
+  (transport, sharded coordinator, crashes, invariant checks): what a
+  seed-sweep actually pays per seed.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from .common import emit
+
+
+def _pingpong(rounds: int):
+    from repro.sim import SimScheduler
+
+    sched = SimScheduler(seed=0)
+
+    def main():
+        ping = sched.clock.event()
+        pong = sched.clock.event()
+
+        def partner():
+            for _ in range(rounds):
+                ping.wait()
+                ping.clear()
+                pong.set()
+
+        sched.clock.spawn(partner, name="partner")
+        for _ in range(rounds):
+            ping.set()
+            pong.wait()
+            pong.clear()
+
+    t0 = time.perf_counter()
+    sched.run(main)
+    dt = time.perf_counter() - t0
+    return {
+        "name": "sched_pingpong",
+        "rounds": rounds,
+        "events": sched.events,
+        "events_per_s": round(sched.events / dt),
+        "wall_s": round(dt, 3),
+    }
+
+
+def _sleepstorm(n_tasks: int, n_sleeps: int):
+    from repro.sim import SimScheduler
+
+    sched = SimScheduler(seed=0)
+
+    def main():
+        def sleeper(i: int):
+            for j in range(n_sleeps):
+                sched.clock.sleep(0.1 + (i * 7 + j) % 13 * 0.01)
+
+        tasks = [
+            sched.clock.spawn(lambda i=i: sleeper(i), name=f"s{i}")
+            for i in range(n_tasks)
+        ]
+        for t in tasks:
+            t.join()
+
+    t0 = time.perf_counter()
+    sched.run(main, max_virtual_time=1e9)
+    dt = time.perf_counter() - t0
+    return {
+        "name": "sched_sleepstorm",
+        "tasks": n_tasks,
+        "events": sched.events,
+        "events_per_s": round(sched.events / dt),
+        "virtual_s": round(sched.now, 2),
+        "speedup_virtual_per_wall": round(sched.now / dt, 1),
+        "wall_s": round(dt, 3),
+    }
+
+
+def _full_stack(n_seeds: int):
+    from repro.sim.explore import run_one
+
+    events = 0
+    virtual = 0.0
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory(prefix="bench-sim-") as wd:
+        for seed in range(n_seeds):
+            r = run_one("counter", seed, Path(wd))
+            events += r.events
+            virtual += r.virtual_time
+    dt = time.perf_counter() - t0
+    return {
+        "name": "sim_full_stack",
+        "seeds": n_seeds,
+        "events": events,
+        "events_per_s": round(events / dt),
+        "seeds_per_s": round(n_seeds / dt, 2),
+        "speedup_virtual_per_wall": round(virtual / dt, 2),
+        "wall_s": round(dt, 3),
+    }
+
+
+def run(quick: bool = True, csv_path=None) -> None:
+    rows = [
+        _pingpong(2_000 if quick else 20_000),
+        _sleepstorm(20 if quick else 100, 50 if quick else 200),
+        _full_stack(2 if quick else 10),
+    ]
+    emit(rows, csv_path=csv_path)

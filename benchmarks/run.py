@@ -19,6 +19,7 @@ SUITES = [
     ("primitives", "bench_primitives", "paper Fig. 15"),
     ("training", "bench_training_dse", "beyond-paper: DSE training loop"),
     ("net", "bench_net", "beyond-paper: transport fabric + sharded coordinator"),
+    ("sim", "bench_sim", "beyond-paper: deterministic simulation scheduler"),
 ]
 
 

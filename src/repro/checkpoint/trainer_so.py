@@ -114,7 +114,7 @@ class TrainerStateObject(StateObject):
             self.bytes_written += len(blob)
             callback()
 
-        threading.Thread(target=_io, daemon=True).start()
+        self.spawn_io(_io)
 
     def Restore(self, version: int) -> bytes:
         payload, meta = self.store.read(version)
@@ -229,7 +229,7 @@ class MetricsStateObject(StateObject):
                 return
             callback()
 
-        threading.Thread(target=_io, daemon=True).start()
+        self.spawn_io(_io)
 
     def Restore(self, version: int) -> bytes:
         payload, meta = self.store.read(version)

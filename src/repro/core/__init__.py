@@ -2,6 +2,7 @@
 via message-passing StateObjects, atomic actions, sthreads, speculation
 barriers, and a DPR-derived recovery protocol with a stateless coordinator.
 """
+from .clock import Clock, REAL_CLOCK, RealClock
 from .ids import Header, PersistReport, RollbackDecision, Vertex
 from .epoch import EpochRWLock
 from .graph import DependencyGraph
@@ -12,6 +13,9 @@ from .coordinator import ConnectResponse, Coordinator, PollResponse
 from .cluster import LocalCluster
 
 __all__ = [
+    "Clock",
+    "REAL_CLOCK",
+    "RealClock",
     "Header",
     "PersistReport",
     "RollbackDecision",

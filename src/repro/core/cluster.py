@@ -15,10 +15,10 @@ from __future__ import annotations
 
 import shutil
 import threading
-import time
 from pathlib import Path
 from typing import Callable, Dict, Iterator, List, Optional
 
+from .clock import Clock, REAL_CLOCK, SpawnHandle
 from .coordinator import Coordinator
 from .runtime import CrashedError, DSEConfig
 from .sthread import DelayMessage
@@ -35,34 +35,38 @@ class LocalCluster:
         strict_commit_ordering: bool = False,
         persist_jitter: float = 0.0,
         barrier_poll_interval: float = 0.002,
+        clock: Clock = REAL_CLOCK,
     ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.clock = clock
         self.coordinator = self._make_coordinator()
         self._defaults = dict(
             group_commit_interval=group_commit_interval,
             strict_commit_ordering=strict_commit_ordering,
             persist_jitter=persist_jitter,
             barrier_poll_interval=barrier_poll_interval,
+            clock=clock,
         )
-        self._lock = threading.RLock()
+        # Held across restart_coordinator's rebuild, which can acquire
+        # coordinator/bus locks => must be clock-sourced (see core/clock.py).
+        self._lock = clock.rlock()
         self._sos: Dict[str, StateObject] = {}
         self._factories: Dict[str, Callable[[], StateObject]] = {}
         self._overrides: Dict[str, dict] = {}
-        self._stop = threading.Event()
-        self._refresher: Optional[threading.Thread] = None
+        self._stop = clock.event()
+        self._refresher: Optional[SpawnHandle] = None
         if refresh_interval is not None:
-            self._refresher = threading.Thread(
-                target=self._refresh_loop, args=(refresh_interval,), daemon=True
+            self._refresher = clock.spawn(
+                lambda: self._refresh_loop(refresh_interval), name="dse-refresher"
             )
-            self._refresher.start()
 
     # ------------------------------------------------------------------ #
     # deployment hooks (overridden by repro.net.NetCluster)              #
     # ------------------------------------------------------------------ #
     def _make_coordinator(self):
         """Build (or rebuild, after restart_coordinator) the coordinator."""
-        return Coordinator(self.root / "coordinator.jsonl")
+        return Coordinator(self.root / "coordinator.jsonl", clock=self.clock)
 
     def _coordinator_handle(self, so_id: str):
         """The coordinator handle a StateObject's runtime talks to. The base
@@ -169,7 +173,14 @@ class LocalCluster:
     # transport helper                                                   #
     # ------------------------------------------------------------------ #
     @staticmethod
-    def call(fn: Callable, *args, retries: int = 200, backoff: float = 0.002, **kwargs):
+    def call(
+        fn: Callable,
+        *args,
+        retries: int = 200,
+        backoff: float = 0.002,
+        clock: Clock = REAL_CLOCK,
+        **kwargs,
+    ):
         """Invoke a service handler with retry-on-delay semantics (what the
         gRPC integration layer does in the paper when a message arrives from
         a future failure epoch, Def 4.3)."""
@@ -177,7 +188,7 @@ class LocalCluster:
             try:
                 return fn(*args, **kwargs)
             except DelayMessage:
-                time.sleep(backoff)
+                clock.sleep(backoff)
         raise TimeoutError("message delayed past retry budget")
 
     # ------------------------------------------------------------------ #
@@ -199,17 +210,17 @@ class LocalCluster:
                 labels.append((so, so.runtime.maybe_persist(force=True)))
             except Exception:
                 labels.append((so, None))
-        deadline = time.time() + 3.0
+        deadline = self.clock.now() + 3.0
         for so, label in labels:
             if label is None:
                 continue
-            while time.time() < deadline:
+            while self.clock.now() < deadline:
                 try:
                     if so.runtime.stats()["committed"] >= label:
                         break
                 except Exception:
                     break
-                time.sleep(0.002)
+                self.clock.sleep(0.002)
         self.coordinator.close()
 
     def wipe(self) -> None:

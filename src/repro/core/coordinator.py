@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
+from .clock import Clock, REAL_CLOCK
 from .graph import DependencyGraph
 from .ids import PersistReport, RollbackDecision, Vertex, vertex_rolled_back
 
@@ -96,9 +97,12 @@ class CoordinatorLog:
 class Coordinator:
     """Embodies cluster consensus as the (singleton) leader (paper §4.2)."""
 
-    def __init__(self, log_path: Path, recovery_timeout: float = 30.0) -> None:
-        self._lock = threading.RLock()
-        self._recovered_cv = threading.Condition(self._lock)
+    def __init__(
+        self, log_path: Path, recovery_timeout: float = 30.0, clock: Clock = REAL_CLOCK
+    ) -> None:
+        self.clock = clock
+        self._lock = clock.rlock()
+        self._recovered_cv = clock.condition(self._lock)
         self._log = CoordinatorLog(log_path)
         self._graph = DependencyGraph()
         self._members: Set[str] = set()
@@ -191,12 +195,9 @@ class Coordinator:
             return decision
 
     def _wait_recovered(self, exclude: Set[str]) -> None:
-        deadline = None
-        import time
-
-        deadline = time.monotonic() + self._recovery_timeout
+        deadline = self.clock.now() + self._recovery_timeout
         while self._awaiting - exclude:
-            remaining = deadline - time.monotonic()
+            remaining = deadline - self.clock.now()
             if remaining <= 0:
                 raise TimeoutError(
                     f"coordinator recovery stalled; awaiting fragments from "

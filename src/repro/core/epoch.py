@@ -14,17 +14,25 @@ from __future__ import annotations
 import threading
 from typing import List
 
+from .clock import Clock, REAL_CLOCK
+
 
 _NUM_STRIPES = 16
 
 
 class EpochRWLock:
-    """Writer-preferring reader-writer lock with striped reader fast path."""
+    """Writer-preferring reader-writer lock with striped reader fast path.
 
-    def __init__(self) -> None:
-        self._mutex = threading.Lock()
-        self._readers_cv = threading.Condition(self._mutex)
-        self._writer_cv = threading.Condition(self._mutex)
+    Blocking waits go through the injected ``clock`` (DESIGN.md §8) so the
+    lock works under both the OS scheduler and deterministic simulation;
+    the stripe locks are leaf locks (never held across a wait) and stay
+    plain ``threading.Lock``.
+    """
+
+    def __init__(self, clock: Clock = REAL_CLOCK) -> None:
+        self._mutex = clock.lock()
+        self._readers_cv = clock.condition(self._mutex)
+        self._writer_cv = clock.condition(self._mutex)
         self._stripe_locks: List[threading.Lock] = [threading.Lock() for _ in range(_NUM_STRIPES)]
         self._stripe_counts: List[int] = [0] * _NUM_STRIPES
         self._writer_active = False

@@ -16,10 +16,11 @@ the paper's literal blocking behaviour.
 from __future__ import annotations
 
 import threading
-import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, Iterable, List, Optional, Set, TYPE_CHECKING
 
+from .clock import Clock, REAL_CLOCK
 from .ids import (
     Header,
     PersistReport,
@@ -47,6 +48,9 @@ class DSEConfig:
     persist_jitter: float = 0.0
     barrier_poll_interval: float = 0.002
     user_metadata_fn: Optional[object] = None  # Callable[[], bytes]
+    #: time + blocking-primitive source; the simulation harness injects a
+    #: virtual clock here (DESIGN.md §8), production uses the real one.
+    clock: Clock = REAL_CLOCK
 
 
 class CrashedError(Exception):
@@ -59,10 +63,11 @@ class DSERuntime:
         self.config = config
         self.so_id = config.so_id
         self.coordinator = config.coordinator
+        self.clock = config.clock
 
-        self._epoch = EpochRWLock()
-        self._mu = threading.RLock()
-        self._boundary_cond = threading.Condition(self._mu)
+        self._epoch = EpochRWLock(self.clock)
+        self._mu = self.clock.rlock()
+        self._boundary_cond = self.clock.condition(self._mu)
 
         self.world = 0
         self._v_cur = 1  # version 0 is the Connect-time snapshot
@@ -77,9 +82,13 @@ class DSERuntime:
         self._decisions: List[RollbackDecision] = []
         self._boundary: Dict[str, int] = {}
         self._report_queue: List[PersistReport] = []
-        self._last_persist = time.monotonic()
+        self._last_persist = self.clock.now()
         if config.persist_jitter:
-            self._last_persist += (hash(self.so_id) % 1000) / 1000.0 * config.persist_jitter
+            # crc32, not hash(): PYTHONHASHSEED-salted str hashing would make
+            # the jitter offset differ across processes, breaking the
+            # (scenario, seed) replay guarantee of DESIGN.md §8
+            stable = zlib.crc32(self.so_id.encode())
+            self._last_persist += (stable % 1000) / 1000.0 * config.persist_jitter
 
         self._dead = False
         self._persist_failures: List[BaseException] = []
@@ -257,7 +266,7 @@ class DSERuntime:
     # ------------------------------------------------------------------ #
     def maybe_persist(self, force: bool = False) -> Optional[int]:
         self._check_alive()
-        now = time.monotonic()
+        now = self.clock.now()
         with self._mu:
             due = (now - self._last_persist) >= self.config.group_commit_interval
             if not force and not (due and self._dirty):
@@ -275,13 +284,13 @@ class DSERuntime:
                 self._labels.append(label)
                 self._v_cur = label + 1
                 self._dirty = False
-                self._last_persist = time.monotonic()
+                self._last_persist = self.clock.now()
                 world = self.world
             user_meta = b""
             if self.config.user_metadata_fn is not None:
                 user_meta = self.config.user_metadata_fn()  # type: ignore[operator]
             meta = encode_metadata(world, label, deps, user=user_meta)
-            done = threading.Event()
+            done = self.clock.event()
 
             def _callback() -> None:
                 with self._mu:
@@ -337,8 +346,14 @@ class DSERuntime:
             self._apply_decision(d)  # Recovery Sequencing Rule (Def 4.2)
         if resp.boundary is not None:
             with self._mu:
+                # Notify only on actual progress: concurrent barriers each
+                # drive _poll_coordinator, and unconditional notify_all lets
+                # them wake each other in a storm that (under zero-latency
+                # virtual time) never lets the poll interval elapse.
+                changed = resp.boundary != self._boundary
                 self._boundary = dict(resp.boundary)
-                self._boundary_cond.notify_all()
+                if changed:
+                    self._boundary_cond.notify_all()
             self._apply_prune()
 
     def _resend_fragments(self) -> None:
@@ -422,7 +437,7 @@ class DSERuntime:
         boundary. Our own pending state is force-persisted once so local
         durability is never the reason a barrier waits a full group-commit
         period."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self.clock.now() + timeout
         with self._mu:
             needs_local = any(
                 dep.so_id == self.so_id and dep.version > self._committed for dep in deps
@@ -449,7 +464,7 @@ class DSERuntime:
                     return
                 remaining = self.config.barrier_poll_interval
                 if deadline is not None:
-                    remaining = min(remaining, deadline - time.monotonic())
+                    remaining = min(remaining, deadline - self.clock.now())
                     if remaining <= 0:
                         raise TimeoutError(f"barrier timed out waiting for {set(deps)}")
                 self._boundary_cond.wait(timeout=remaining)

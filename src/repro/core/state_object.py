@@ -56,6 +56,11 @@ class StateObject(abc.ABC):
         if self._runtime is not None:
             raise RuntimeError("Connect must be invoked exactly once")
         self._runtime = DSERuntime(self, config)
+        # stores exist before the clock does (service constructors run
+        # first): bind every VersionStore to the runtime's injected clock
+        for attr in vars(self).values():
+            if isinstance(attr, VersionStore):
+                attr.bind_clock(self._runtime.clock)
         self._runtime.connect()
 
     def StartAction(self, header: Optional["Header"] = None) -> bool:
@@ -72,6 +77,17 @@ class StateObject(abc.ABC):
 
     def Refresh(self) -> None:
         self.runtime.refresh()
+
+    def spawn_io(self, fn: Callable[[], None], name: str = "persist-io") -> None:
+        """Run ``fn`` on an independent thread of control via the runtime's
+        injected clock — a real daemon thread in production, a scheduled
+        task under deterministic simulation (DESIGN.md §8). Persistence
+        backends use this for their async IO instead of raw
+        ``threading.Thread`` so ``Persist`` completion is simulatable."""
+        if self._runtime is not None:
+            self._runtime.clock.spawn(fn, name=f"{self._runtime.so_id}:{name}")
+        else:
+            threading.Thread(target=fn, name=name, daemon=True).start()
 
     def wait_durable(self, timeout: Optional[float] = None) -> bool:
         """Convenience: must be called *inside* an action. Blocks until the
@@ -108,7 +124,13 @@ class VersionStore:
     restarted incarnation.
     """
 
-    def __init__(self, root: Path, keep_in_memory: int = 8, simulate_io_ms: float = 0.0) -> None:
+    def __init__(
+        self,
+        root: Path,
+        keep_in_memory: int = 8,
+        simulate_io_ms: float = 0.0,
+        clock=None,
+    ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._mem: Dict[int, Tuple[bytes, bytes]] = {}
@@ -116,7 +138,16 @@ class VersionStore:
         self._keep = keep_in_memory
         self._lock = threading.Lock()
         self._simulate_io_ms = simulate_io_ms
+        self._clock = clock  # None => real time.sleep for simulated IO delay
         self._poisoned = False
+
+    def bind_clock(self, clock) -> None:
+        """Late-bind an injected clock (DESIGN.md §8). Services build their
+        stores in their constructors, before ``Connect`` delivers the
+        runtime's clock — without the rebind, ``simulate_io_ms`` would burn
+        real wall time (and zero virtual time) under simulation."""
+        if self._clock is None:
+            self._clock = clock
 
     # -- write path -----------------------------------------------------
     def poison(self) -> None:
@@ -129,9 +160,12 @@ class VersionStore:
         if self._poisoned:
             raise RuntimeError("VersionStore poisoned (incarnation crashed)")
         if self._simulate_io_ms > 0:
-            import time
+            if self._clock is not None:
+                self._clock.sleep(self._simulate_io_ms / 1e3)
+            else:
+                import time
 
-            time.sleep(self._simulate_io_ms / 1e3)
+                time.sleep(self._simulate_io_ms / 1e3)
         tmp = self.root / f".v{version}.tmp"
         final = self.root / f"v{version}.blob"
         with open(tmp, "wb") as f:

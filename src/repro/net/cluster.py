@@ -21,6 +21,7 @@ from __future__ import annotations
 from pathlib import Path
 from typing import Callable, Optional
 
+from ..core.clock import Clock, REAL_CLOCK
 from ..core.cluster import LocalCluster
 from ..core.coordinator import Coordinator
 from ..core.state_object import StateObject
@@ -72,18 +73,21 @@ class NetCluster(LocalCluster):
         *,
         transport: Optional[Transport] = None,
         n_shards: int = 0,
+        clock: Clock = REAL_CLOCK,
         **kw,
     ) -> None:
-        self.transport = transport if transport is not None else SimTransport()
+        self.transport = transport if transport is not None else SimTransport(clock=clock)
         self.n_shards = n_shards
-        super().__init__(root, **kw)
+        super().__init__(root, clock=clock, **kw)
 
     # ------------------------------------------------------------------ #
     # deployment hooks                                                   #
     # ------------------------------------------------------------------ #
     def _make_coordinator(self):
         if self.n_shards:
-            coord = ShardedCoordinator(self.root / "coord", n_shards=self.n_shards)
+            coord = ShardedCoordinator(
+                self.root / "coord", n_shards=self.n_shards, clock=self.clock
+            )
             for shard in coord.shards:
                 self.transport.register(
                     f"coord/{shard.shard_id}", self._shard_handler(shard.shard_id)

@@ -34,10 +34,10 @@ from __future__ import annotations
 import bisect
 import hashlib
 import threading
-import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
+from ..core.clock import Clock, REAL_CLOCK
 from ..core.coordinator import ConnectResponse, Coordinator, PollResponse
 from ..core.graph import DependencyGraph
 from ..core.ids import PersistReport, RollbackDecision
@@ -75,10 +75,11 @@ class CoordinatorShard(Coordinator):
         log_path: Path,
         bus: "DecisionBus",
         recovery_timeout: float = 30.0,
+        clock: Clock = REAL_CLOCK,
     ) -> None:
         self.shard_id = shard_id
         self._bus = bus
-        super().__init__(log_path, recovery_timeout)
+        super().__init__(log_path, recovery_timeout, clock=clock)
         bus.register_shard(self)
 
     # -- state the bus reads (never under this shard's lock from the bus
@@ -153,10 +154,14 @@ class DecisionBus:
     ``_dlock``-guarded accessors, which never wait on shard locks.
     """
 
-    def __init__(self, recovery_timeout: float = 30.0) -> None:
+    def __init__(self, recovery_timeout: float = 30.0, clock: Clock = REAL_CLOCK) -> None:
+        self._clock = clock
         self._dlock = threading.Lock()  # decisions dict + fsn + shard list
-        self._decide_lock = threading.Lock()  # serializes rollback decisions
-        self._boundary_mu = threading.Lock()  # boundary cache
+        # Held across waits / cross-shard lock acquisitions => must be
+        # clock-sourced (a real lock held by a paused simulation task would
+        # deadlock the cooperative scheduler, see core/clock.py).
+        self._decide_lock = clock.lock()  # serializes rollback decisions
+        self._boundary_mu = clock.lock()  # boundary cache
         self._shards: List[CoordinatorShard] = []
         self._decisions: Dict[int, RollbackDecision] = {}
         self._fsn = 0
@@ -226,14 +231,14 @@ class DecisionBus:
     def _wait_all_recovered(self) -> None:
         """A decision on an incomplete global view would erase innocent
         members of a recovering shard; wait for every shard's fragments."""
-        deadline = time.monotonic() + self._recovery_timeout
+        deadline = self._clock.now() + self._recovery_timeout
         while any(s.is_awaiting for s in self.shards()):
-            if time.monotonic() > deadline:
+            if self._clock.now() > deadline:
                 stalled = [s.shard_id for s in self.shards() if s.is_awaiting]
                 raise TimeoutError(
                     f"decision stalled; shards {stalled} still collecting fragments"
                 )
-            time.sleep(0.002)
+            self._clock.sleep(0.002)
 
     # -- global boundary --------------------------------------------------- #
     def global_boundary(self) -> Optional[Dict[str, int]]:
@@ -276,15 +281,19 @@ class ShardedCoordinator:
         *,
         recovery_timeout: float = 30.0,
         vnodes: int = 64,
+        clock: Clock = REAL_CLOCK,
     ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.n_shards = n_shards
         self._recovery_timeout = recovery_timeout
+        self.clock = clock
         self.ring = HashRing(list(range(n_shards)), vnodes=vnodes)
-        self.bus = DecisionBus(recovery_timeout)
+        self.bus = DecisionBus(recovery_timeout, clock=clock)
         self.shards: List[CoordinatorShard] = [
-            CoordinatorShard(i, self.root / f"shard{i}.jsonl", self.bus, recovery_timeout)
+            CoordinatorShard(
+                i, self.root / f"shard{i}.jsonl", self.bus, recovery_timeout, clock=clock
+            )
             for i in range(n_shards)
         ]
 
@@ -318,7 +327,11 @@ class ShardedCoordinator:
         # bus's shard list must never expose a closed log to a concurrent
         # decision broadcast (register_shard atomically swaps by shard_id).
         self.shards[idx] = CoordinatorShard(
-            idx, self.root / f"shard{idx}.jsonl", self.bus, self._recovery_timeout
+            idx,
+            self.root / f"shard{idx}.jsonl",
+            self.bus,
+            self._recovery_timeout,
+            clock=self.clock,
         )
         old.close()
         return self.shards[idx]

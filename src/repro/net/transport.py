@@ -19,16 +19,17 @@ after it has caught up — the transport equivalent of the retry loop in
 """
 from __future__ import annotations
 
+import copy
 import heapq
 import itertools
 import pickle
 import random
 import threading
-import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
+from ..core.clock import Clock, REAL_CLOCK
 from ..core.sthread import DelayMessage
 
 #: handler(method, *args, **kwargs) -> result
@@ -44,6 +45,8 @@ class LinkSpec:
     loss_prob: float = 0.0
     reorder_prob: float = 0.0
     reorder_ms: float = 1.0  # extra delay applied to reordered messages
+    dup_prob: float = 0.0  # wire-level duplication (dedup makes processing 1x)
+    dup_ms: float = 1.0  # extra delay applied to the duplicate copy
 
 
 @dataclass
@@ -87,10 +90,17 @@ class DirectTransport(Transport):
     """Baseline: direct in-process dispatch (what the seed repo does), with
     the same retry-on-delay semantics so callers are transport-agnostic."""
 
-    def __init__(self, *, call_timeout: float = 0.4, delay_backoff: float = 0.002) -> None:
+    def __init__(
+        self,
+        *,
+        call_timeout: float = 0.4,
+        delay_backoff: float = 0.002,
+        clock: Clock = REAL_CLOCK,
+    ) -> None:
         self._eps: Dict[str, Handler] = {}
         self._call_timeout = call_timeout
         self._delay_backoff = delay_backoff
+        self._clock = clock
         self._calls = 0
 
     def register(self, endpoint_id: str, handler: Handler) -> None:
@@ -99,14 +109,14 @@ class DirectTransport(Transport):
     def call(self, src: str, dst: str, method: str, *args, timeout: Optional[float] = None, **kwargs):
         handler = self._eps[dst]
         self._calls += 1
-        deadline = time.monotonic() + (timeout if timeout is not None else self._call_timeout)
+        deadline = self._clock.now() + (timeout if timeout is not None else self._call_timeout)
         while True:
             try:
                 return handler(method, *args, **kwargs)
             except DelayMessage:
-                if time.monotonic() >= deadline:
+                if self._clock.now() >= deadline:
                     raise TimeoutError(f"{src}->{dst} {method}: delayed past retry budget")
-                time.sleep(self._delay_backoff)
+                self._clock.sleep(self._delay_backoff)
 
     def cast(self, src: str, dst: str, method: str, *args, **kwargs) -> None:
         self._calls += 1
@@ -126,9 +136,9 @@ class _Waiter:
 
     __slots__ = ("_mu", "event", "_result")
 
-    def __init__(self) -> None:
+    def __init__(self, clock: Clock) -> None:
         self._mu = threading.Lock()
-        self.event = threading.Event()
+        self.event = clock.event()
         self._result: Optional[Tuple[str, bytes]] = None
 
     def resolve(self, status: str, blob: bytes) -> None:
@@ -153,15 +163,16 @@ class _TimedQueue:
         name: str,
         drain: Callable[[List[Any]], None],
         max_batch: Optional[Callable[[], int]] = None,
+        clock: Clock = REAL_CLOCK,
     ) -> None:
-        self._cv = threading.Condition()
+        self._clock = clock
+        self._cv = clock.condition()
         self._heap: List[Tuple[float, int, Any]] = []
         self._seq = itertools.count()
         self._stop = False
         self._drain = drain
         self._max_batch = max_batch
-        self._thread = threading.Thread(target=self._run, name=name, daemon=True)
-        self._thread.start()
+        self._worker = clock.spawn(self._run, name=name)
 
     def push(self, deliver_at: float, item: Any) -> None:
         with self._cv:
@@ -178,14 +189,14 @@ class _TimedQueue:
             batch: List[Any] = []
             with self._cv:
                 while not self._stop:
-                    now = time.monotonic()
+                    now = self._clock.now()
                     if self._heap and self._heap[0][0] <= now:
                         break
                     wait = (self._heap[0][0] - now) if self._heap else None
                     self._cv.wait(timeout=wait)
                 if self._stop:
                     return
-                now = time.monotonic()
+                now = self._clock.now()
                 limit = self._max_batch() if self._max_batch else None
                 while (
                     self._heap
@@ -207,7 +218,10 @@ class _Endpoint:
         # msg_id -> cached reply (exactly-once processing under retries)
         self._seen: "OrderedDict[str, Tuple[str, bytes]]" = OrderedDict()
         self._q = _TimedQueue(
-            f"sim-ep-{endpoint_id}", self._drain_batch, max_batch=lambda: transport.batch_size
+            f"sim-ep-{endpoint_id}",
+            self._drain_batch,
+            max_batch=lambda: transport.batch_size,
+            clock=transport.clock,
         )
 
     def push(self, env: Envelope) -> None:
@@ -225,11 +239,12 @@ class _Endpoint:
         if not env.needs_reply:
             # fire-and-forget: no reply traffic, no dedup (nothing retries),
             # and handler errors vanish with the message — a dying worker
-            # thread is the one failure mode this must never have.
+            # thread is the one failure mode this must never have. Exception,
+            # not BaseException: the simulation's TaskCancelled must fly.
             try:
                 args, kwargs = pickle.loads(env.payload)
                 self.handler(env.method, *args, **kwargs)
-            except BaseException:  # noqa: BLE001
+            except Exception:  # noqa: BLE001
                 pass
             return
         cached = self._seen.get(env.msg_id)
@@ -247,7 +262,9 @@ class _Endpoint:
             # the receiver has caught up with the failure epoch.
             self._t._send_reply(env, "delay", b"")
             return
-        except BaseException as e:  # noqa: BLE001 — carried to the caller
+        except Exception as e:  # noqa: BLE001 — carried to the caller; the
+            # simulation's TaskCancelled (a BaseException) must NOT be caught,
+            # cached, and replied — it tears down this worker, nothing else
             try:
                 blob = pickle.dumps(e)
             except Exception:
@@ -275,11 +292,14 @@ class SimTransport(Transport):
         retry_timeout: float = 0.05,
         delay_backoff: float = 0.002,
         dedup_cache_size: int = 8192,
+        clock: Clock = REAL_CLOCK,
     ) -> None:
+        self.clock = clock
         self._rng = random.Random(seed)
         self._rng_mu = threading.Lock()
         self._eps: Dict[str, _Endpoint] = {}
         self._links: Dict[Tuple[str, str], LinkSpec] = {}
+        self._method_links: Dict[str, LinkSpec] = {}
         self._default = default_link or LinkSpec()
         self._partition_groups: List[Set[str]] = []
         self._waiters: Dict[str, _Waiter] = {}
@@ -299,12 +319,13 @@ class SimTransport(Transport):
             "delivered_msgs": 0,
             "dropped_loss": 0,
             "dropped_partition": 0,
+            "duplicated": 0,
             "retries": 0,
             "bytes": 0,
         }
 
         # reply scheduler: replies traverse the same faulty links
-        self._replies = _TimedQueue("sim-replies", self._drain_replies)
+        self._replies = _TimedQueue("sim-replies", self._drain_replies, clock=clock)
 
     # -- topology -------------------------------------------------------- #
     def register(self, endpoint_id: str, handler: Handler) -> None:
@@ -316,10 +337,23 @@ class SimTransport(Transport):
 
     def set_link(self, src: str, dst: str, **spec) -> None:
         """Configure the directed link src->dst; ``"*"`` wildcards match any
-        endpoint. Lookup precedence: (src,dst), (src,*), (*,dst), default."""
+        endpoint. Lookup precedence: method class (see
+        :meth:`set_method_link`), (src,dst), (src,*), (*,dst), default."""
         self._links[(src, dst)] = LinkSpec(**spec)
 
-    def _link(self, src: str, dst: str) -> LinkSpec:
+    def set_method_link(self, method: str, **spec) -> None:
+        """Fault a *message class*: every message carrying ``method``
+        (e.g. all ``report`` or ``poll`` traffic), whatever its endpoints,
+        takes this link spec. Fault plans use this to target protocol roles
+        rather than topology."""
+        self._method_links[method] = LinkSpec(**spec)
+
+    def clear_method_link(self, method: str) -> None:
+        self._method_links.pop(method, None)
+
+    def _link(self, src: str, dst: str, method: Optional[str] = None) -> LinkSpec:
+        if method is not None and method in self._method_links:
+            return self._method_links[method]
         for key in ((src, dst), (src, "*"), ("*", dst)):
             if key in self._links:
                 return self._links[key]
@@ -349,8 +383,9 @@ class SimTransport(Transport):
         return group_of(src) != group_of(dst)
 
     # -- send path ------------------------------------------------------- #
-    def _roll(self, link: LinkSpec) -> Optional[float]:
-        """Returns delay in seconds, or None if the message is lost."""
+    def _roll(self, link: LinkSpec) -> Optional[Tuple[float, Optional[float]]]:
+        """Returns (delay, duplicate_delay) in seconds — duplicate_delay is
+        None unless the wire duplicated the message — or None if lost."""
         with self._rng_mu:
             if link.loss_prob and self._rng.random() < link.loss_prob:
                 return None
@@ -359,7 +394,10 @@ class SimTransport(Transport):
                 d += self._rng.random() * link.jitter_ms
             if link.reorder_prob and self._rng.random() < link.reorder_prob:
                 d += link.reorder_ms
-        return d / 1e3
+            dup = None
+            if link.dup_prob and self._rng.random() < link.dup_prob:
+                dup = (d + link.dup_ms) / 1e3
+        return d / 1e3, dup
 
     def _send(self, env: Envelope) -> None:
         with self._stats_mu:
@@ -369,16 +407,25 @@ class SimTransport(Transport):
             with self._stats_mu:
                 self._stats["dropped_partition"] += 1
             return
-        delay = self._roll(self._link(env.src, env.dst))
-        if delay is None:
+        rolled = self._roll(self._link(env.src, env.dst, env.method))
+        if rolled is None:
             with self._stats_mu:
                 self._stats["dropped_loss"] += 1
             return
+        delay, dup = rolled
         ep = self._eps.get(env.dst)
         if ep is None:
             raise TransportError(f"unknown endpoint {env.dst!r}")
-        env.deliver_at = time.monotonic() + delay
+        env.deliver_at = self.clock.now() + delay
         ep.push(env)
+        if dup is not None:
+            # wire-level duplicate: same msg_id, so receiver-side dedup keeps
+            # processing exactly-once (casts, which skip dedup, may observe it)
+            with self._stats_mu:
+                self._stats["duplicated"] += 1
+            twin = copy.copy(env)
+            twin.deliver_at = self.clock.now() + dup
+            ep.push(twin)
 
     def _send_reply(self, request: Envelope, status: str, blob: bytes) -> None:
         """Schedule a reply over the dst->src link (same fault model)."""
@@ -388,12 +435,16 @@ class SimTransport(Transport):
             with self._stats_mu:
                 self._stats["dropped_partition"] += 1
             return
-        delay = self._roll(self._link(request.dst, request.src))
-        if delay is None:
+        rolled = self._roll(self._link(request.dst, request.src, request.method))
+        if rolled is None:
             with self._stats_mu:
                 self._stats["dropped_loss"] += 1
             return
-        self._replies.push(time.monotonic() + delay, (request.msg_id, status, blob))
+        delay, dup = rolled
+        self._replies.push(self.clock.now() + delay, (request.msg_id, status, blob))
+        if dup is not None:
+            # duplicate reply: the waiter takes the first, drops the twin
+            self._replies.push(self.clock.now() + dup, (request.msg_id, status, blob))
 
     def _drain_replies(self, batch: List[Tuple[str, str, bytes]]) -> None:
         for msg_id, status, blob in batch:
@@ -413,10 +464,10 @@ class SimTransport(Transport):
     def call(self, src: str, dst: str, method: str, *args, timeout: Optional[float] = None, **kwargs):
         payload = pickle.dumps((args, kwargs))
         msg_id = f"{src}:{next(self._msg_seq)}"
-        waiter = _Waiter()
+        waiter = _Waiter(self.clock)
         with self._waiters_mu:
             self._waiters[msg_id] = waiter
-        deadline = time.monotonic() + (timeout if timeout is not None else self.call_timeout)
+        deadline = self.clock.now() + (timeout if timeout is not None else self.call_timeout)
         attempt = 0
         try:
             while True:
@@ -425,7 +476,7 @@ class SimTransport(Transport):
                     with self._stats_mu:
                         self._stats["retries"] += 1
                 self._send(Envelope(msg_id, src, dst, method, payload, attempt=attempt))
-                budget = min(self.retry_timeout * min(attempt, 8), deadline - time.monotonic())
+                budget = min(self.retry_timeout * min(attempt, 8), deadline - self.clock.now())
                 if budget > 0 and waiter.event.wait(budget):
                     result = waiter.take()
                     if result is not None:
@@ -435,8 +486,8 @@ class SimTransport(Transport):
                         if status == "err":
                             raise pickle.loads(blob)
                         # status == "delay": back off, retry the SAME msg_id
-                        time.sleep(self.delay_backoff)
-                if time.monotonic() >= deadline:
+                        self.clock.sleep(self.delay_backoff)
+                if self.clock.now() >= deadline:
                     raise TimeoutError(
                         f"{src}->{dst} {method}: no reply after {attempt} attempts"
                     )

@@ -54,7 +54,7 @@ class EventBroker(StateObject):
                 return
             callback()
 
-        threading.Thread(target=_run, daemon=True).start()
+        self.spawn_io(_run)
 
     def Restore(self, version: int) -> bytes:
         for core in self._cores.values():

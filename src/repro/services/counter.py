@@ -28,7 +28,7 @@ class CounterStateObject(StateObject):
                 return  # crashed incarnation never acks durability
             callback()
 
-        threading.Thread(target=_io, daemon=True).start()
+        self.spawn_io(_io)
 
     def Restore(self, version: int) -> bytes:
         payload, meta = self.store.read(version)

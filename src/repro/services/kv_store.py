@@ -36,7 +36,7 @@ class SpeculativeKVStore(StateObject):
                 return
             callback()
 
-        threading.Thread(target=_io, daemon=True).start()
+        self.spawn_io(_io)
 
     def Restore(self, version: int) -> bytes:
         payload, meta = self.store.read(version)

@@ -226,7 +226,7 @@ class SpeculativeLog(StateObject):
                 return
             callback()
 
-        threading.Thread(target=_run, daemon=True).start()
+        self.spawn_io(_run)
 
     def Restore(self, version: int) -> bytes:
         return self.core.restore(version)

@@ -49,7 +49,7 @@ class WorkflowEngine(StateObject):
                 return
             callback()
 
-        threading.Thread(target=_io, daemon=True).start()
+        self.spawn_io(_io)
 
     def Restore(self, version: int) -> bytes:
         payload, meta = self.store.read(version)

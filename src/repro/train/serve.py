@@ -68,7 +68,7 @@ class DecodeSessionStateObject(StateObject):
                 return
             callback()
 
-        threading.Thread(target=_io, daemon=True).start()
+        self.spawn_io(_io)
 
     def Restore(self, version: int) -> bytes:
         payload, meta = self.store.read(version)

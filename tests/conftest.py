@@ -13,6 +13,7 @@ from typing import Optional, Tuple
 
 import pytest
 
+from repro.core.clock import Clock, REAL_CLOCK
 from repro.services.counter import CounterStateObject as CounterSO
 
 
@@ -40,16 +41,39 @@ def make_counter(tmp_path: Path, name: str, io_ms: float = 0.0):
     return factory
 
 
-def wait_committed(so, label: Optional[int], timeout: float = 5.0) -> bool:
+def wait_committed(
+    so, label: Optional[int], timeout: float = 5.0, clock: Clock = REAL_CLOCK
+) -> bool:
     """Deadline-poll until the async Persist IO for ``label`` has committed
-    (fixed sleeps race the IO thread on a loaded machine)."""
-    import time
-
+    (fixed sleeps race the IO thread on a loaded machine). Pass a SimClock to
+    poll in virtual time under deterministic simulation."""
     if label is None:
         return True
-    deadline = time.monotonic() + timeout
-    while time.monotonic() < deadline:
+    deadline = clock.now() + timeout
+    while clock.now() < deadline:
         if so.runtime.stats()["committed"] >= label:
             return True
-        time.sleep(0.002)
+        clock.sleep(0.002)
     return False
+
+
+def settle(
+    predicate,
+    cluster=None,
+    timeout: float = 10.0,
+    interval: float = 0.01,
+    clock: Clock = REAL_CLOCK,
+) -> bool:
+    """Deadline-poll ``predicate``, optionally driving ``cluster`` refresh
+    rounds each iteration. Clock-injected: under the real clock this is the
+    usual anti-flake poll loop; under a SimClock the waits are virtual and
+    the poll runs deterministically (``SimCluster.settle`` is its in-tree
+    twin for scenario code)."""
+    deadline = clock.now() + timeout
+    while clock.now() < deadline:
+        if cluster is not None:
+            cluster.refresh_all()
+        if predicate():
+            return True
+        clock.sleep(interval)
+    return predicate()

@@ -1,6 +1,13 @@
 """Transport-fabric tests (repro.net.transport): RPC semantics, per-link
 fault injection (latency / loss / reorder / partition), exactly-once
-processing under at-least-once delivery, and batched delivery."""
+processing under at-least-once delivery, and batched delivery.
+
+The fault-injection tests run under the deterministic simulation runtime
+(``repro.sim``): latency, retry backoff, and partition windows elapse in
+virtual time, so a test that used to burn ~1.5s of wall clock on sleeps now
+runs in milliseconds and replays identically from its seed.
+``TestSimTransportRPC.test_roundtrip_and_latency`` stays on the real clock
+as the wall-clock smoke test for this module."""
 from __future__ import annotations
 
 import threading
@@ -10,6 +17,7 @@ import pytest
 
 from repro.core.sthread import DelayMessage
 from repro.net import DirectTransport, LinkSpec, SimTransport
+from repro.sim import SimScheduler
 
 
 @pytest.fixture
@@ -24,6 +32,29 @@ def sim():
     yield make
     for t in transports:
         t.close()
+
+
+def run_virtual(body, seed: int = 0):
+    """Run ``body(sched, make_transport)`` as the root task of a seeded
+    simulation; transports draw their clock (and worker tasks) from the
+    scheduler, so every latency/retry/partition wait is virtual."""
+    sched = SimScheduler(seed=seed)
+
+    def main():
+        transports = []
+
+        def make(**kw) -> SimTransport:
+            t = SimTransport(clock=sched.clock, **kw)
+            transports.append(t)
+            return t
+
+        try:
+            return body(sched, make)
+        finally:
+            for t in transports:
+                t.close()
+
+    return sched.run(main)
 
 
 class TestDirectTransport:
@@ -91,68 +122,86 @@ class TestSimTransportRPC:
 
 
 class TestFaultInjection:
-    def test_exactly_once_processing_under_loss(self, sim):
+    """Ported to virtual time: the waits below (retry backoff under 30%
+    loss, 0.15s partition windows, a 50ms reorder delay) cost no wall clock
+    and replay deterministically from the scheduler seed."""
+
+    def test_exactly_once_processing_under_loss(self):
         """30% loss on requests AND replies: every call still returns, and
         the handler's side effect lands exactly once per logical message."""
-        t = sim(
-            seed=42,
-            default_link=LinkSpec(latency_ms=0.1, loss_prob=0.3),
-            retry_timeout=0.01,
-            call_timeout=10.0,
-        )
-        state = {"count": 0}
-        mu = threading.Lock()
 
-        def handler(method, *a, **k):
-            with mu:
+        def body(sched, make):
+            t = make(
+                seed=42,
+                default_link=LinkSpec(latency_ms=0.1, loss_prob=0.3),
+                retry_timeout=0.01,
+                call_timeout=10.0,
+            )
+            state = {"count": 0}
+
+            def handler(method, *a, **k):
                 state["count"] += 1
                 return state["count"]
 
-        t.register("svc", handler)
-        n = 40
-        results = [t.call("cli", "svc", "inc") for _ in range(n)]
-        assert state["count"] == n  # retries never double-processed
-        assert sorted(results) == list(range(1, n + 1))
-        st = t.stats()
-        assert st["dropped_loss"] > 0 and st["retries"] > 0
+            t.register("svc", handler)
+            n = 40
+            results = [t.call("cli", "svc", "inc") for _ in range(n)]
+            assert state["count"] == n  # retries never double-processed
+            assert sorted(results) == list(range(1, n + 1))
+            st = t.stats()
+            assert st["dropped_loss"] > 0 and st["retries"] > 0
 
-    def test_partition_drops_then_heals(self, sim):
-        t = sim(retry_timeout=0.01)
-        t.register("svc", lambda method, *a, **k: "pong")
-        t.partition({"svc"})
-        with pytest.raises(TimeoutError):
-            t.call("cli", "svc", "ping", timeout=0.15)
-        assert t.stats()["dropped_partition"] > 0
-        t.heal()
-        assert t.call("cli", "svc", "ping") == "pong"
+        run_virtual(body)
 
-    def test_same_group_unaffected_by_partition(self, sim):
-        t = sim()
-        t.register("a", lambda method, *arg, **k: "from-a")
-        t.register("b", lambda method, *arg, **k: "from-b")
-        t.partition({"a", "cli"})
-        assert t.call("cli", "a", "x") == "from-a"  # same island
-        with pytest.raises(TimeoutError):
-            t.call("cli", "b", "x", timeout=0.15)  # across the cut
+    def test_partition_drops_then_heals(self):
+        def body(sched, make):
+            t = make(retry_timeout=0.01)
+            t.register("svc", lambda method, *a, **k: "pong")
+            t.partition({"svc"})
+            with pytest.raises(TimeoutError):
+                t.call("cli", "svc", "ping", timeout=0.15)
+            assert t.stats()["dropped_partition"] > 0
+            t.heal()
+            assert t.call("cli", "svc", "ping") == "pong"
 
-    def test_reorder_overtakes(self, sim):
+        run_virtual(body)
+
+    def test_same_group_unaffected_by_partition(self):
+        def body(sched, make):
+            t = make()
+            t.register("a", lambda method, *arg, **k: "from-a")
+            t.register("b", lambda method, *arg, **k: "from-b")
+            t.partition({"a", "cli"})
+            assert t.call("cli", "a", "x") == "from-a"  # same island
+            with pytest.raises(TimeoutError):
+                t.call("cli", "b", "x", timeout=0.15)  # across the cut
+
+        run_virtual(body)
+
+    def test_reorder_overtakes(self):
         """A reordered message is overtaken by a later send on a fast link."""
-        t = sim()
-        t.set_link("slowpoke", "svc", latency_ms=0.0, reorder_prob=1.0, reorder_ms=50.0)
-        order = []
-        done = threading.Event()
 
-        def handler(method, *a, **k):
-            order.append(method)
-            if len(order) == 2:
-                done.set()
-            return None
+        def body(sched, make):
+            t = make()
+            t.set_link(
+                "slowpoke", "svc", latency_ms=0.0, reorder_prob=1.0, reorder_ms=50.0
+            )
+            order = []
+            done = sched.clock.event()
 
-        t.register("svc", handler)
-        t.cast("slowpoke", "svc", "first")
-        t.cast("cli", "svc", "second")
-        assert done.wait(2.0)
-        assert order == ["second", "first"]
+            def handler(method, *a, **k):
+                order.append(method)
+                if len(order) == 2:
+                    done.set()
+                return None
+
+            t.register("svc", handler)
+            t.cast("slowpoke", "svc", "first")
+            t.cast("cli", "svc", "second")
+            assert done.wait(2.0)
+            assert order == ["second", "first"]
+
+        run_virtual(body)
 
 
 class TestBatchedDelivery:

@@ -9,18 +9,24 @@
 * the end-to-end acceptance scenario: recovery to a consistent boundary
   with 2 coordinator shards while SimTransport injects message loss and a
   healed partition.
+
+The two lossy-fabric recovery tests run under deterministic simulation
+(``repro.sim.SimCluster``): their latency/retry/settle waits are virtual,
+so they cost milliseconds instead of wall seconds and replay identically
+from their seed. ``test_e2e_recovery_with_shards_loss_and_healed_partition``
+stays on the real clock as this module's wall-clock smoke test.
 """
 from __future__ import annotations
 
 import json
-import time
 
 import pytest
 
 from repro.core.ids import PersistReport, Vertex
 from repro.net import HashRing, LinkSpec, NetCluster, ShardedCoordinator, SimTransport
+from repro.sim import SimCluster
 
-from conftest import make_counter
+from conftest import make_counter, settle
 
 
 def distinct_shard_ids(sc_or_ring, base: str = "p") -> tuple:
@@ -37,17 +43,6 @@ def distinct_shard_ids(sc_or_ring, base: str = "p") -> tuple:
 
 def rep(so: str, version: int, deps=()) -> PersistReport:
     return PersistReport(Vertex(so, 0, version), tuple(Vertex(s, 0, v) for s, v in deps))
-
-
-def settle(predicate, cluster=None, timeout: float = 10.0, interval: float = 0.01):
-    deadline = time.monotonic() + timeout
-    while time.monotonic() < deadline:
-        if cluster is not None:
-            cluster.refresh_all()
-        if predicate():
-            return True
-        time.sleep(interval)
-    return predicate()
 
 
 # --------------------------------------------------------------------------- #
@@ -169,29 +164,42 @@ class TestNetClusterRecovery:
     def test_coordinator_restart_fragment_resend_over_lossy_fabric(self, tmp_path):
         """Satellite: a restarted (sharded) coordinator refuses boundary
         queries until every participant has resent fragments — with the
-        resends themselves delayed, dropped, and retried by the fabric."""
-        link = LinkSpec(latency_ms=0.2, jitter_ms=0.5, loss_prob=0.15, reorder_prob=0.2)
-        c = self._cluster(tmp_path, link)
-        p_id, q_id = distinct_shard_ids(c.coordinator)
-        p = c.add(p_id, make_counter(tmp_path, "p"))
-        q = c.add(q_id, make_counter(tmp_path, "q"))
-        _, h = c.send(None, p_id, "increment", None)
-        c.send(None, q_id, "increment", h, by=5)
-        assert settle(
-            lambda: (c.coordinator.current_boundary() or {}).get(q_id, -1) >= 1,
-            cluster=c,
+        resends themselves delayed, dropped, and retried by the fabric.
+        Runs under deterministic simulation: the lossy retry storm and both
+        settle loops elapse in virtual time."""
+        sim = SimCluster(
+            tmp_path,
+            seed=11,
+            n_shards=2,
+            default_link=LinkSpec(
+                latency_ms=0.2, jitter_ms=0.5, loss_prob=0.15, reorder_prob=0.2
+            ),
+            refresh_interval=None,
+            group_commit_interval=0.005,
+            call_timeout=3.0,
         )
-        before = c.coordinator.current_boundary()
 
-        c.restart_coordinator()
-        assert c.coordinator.current_boundary() is None  # all shards recovering
-        # every poll answers resend_fragments=True until the (lossy, delayed,
-        # retried) fragment resends from BOTH participants arrive in full
-        assert settle(lambda: c.coordinator.current_boundary() is not None, cluster=c)
-        after = c.coordinator.current_boundary()
-        for so, wm in before.items():
-            assert after[so] >= wm, "recovered view must be at least as fresh"
-        c.shutdown()
+        def scenario(sim: SimCluster):
+            c = sim.cluster
+            p_id, q_id = distinct_shard_ids(c.coordinator)
+            c.add(p_id, make_counter(tmp_path, "p"))
+            c.add(q_id, make_counter(tmp_path, "q"))
+            _, h = c.send(None, p_id, "increment", None)
+            c.send(None, q_id, "increment", h, by=5)
+            assert sim.settle(lambda: (sim.boundary() or {}).get(q_id, -1) >= 1)
+            before = sim.boundary()
+
+            c.restart_coordinator()
+            assert sim.boundary() is None  # all shards recovering
+            # every poll answers resend_fragments=True until the (lossy,
+            # delayed, retried) fragment resends from BOTH participants
+            # arrive in full
+            assert sim.settle(lambda: sim.boundary() is not None)
+            after = sim.boundary()
+            for so, wm in before.items():
+                assert after[so] >= wm, "recovered view must be at least as fresh"
+
+        sim.run(scenario, monitor_interval=None)
 
     def test_e2e_recovery_with_shards_loss_and_healed_partition(self, tmp_path):
         """Acceptance scenario: 2 coordinator shards, lossy fabric, a
@@ -266,19 +274,32 @@ class TestNetClusterRecovery:
 
     def test_service_traffic_exactly_once_under_loss(self, tmp_path):
         """services/* must pass under injected faults: every lossy RPC lands
-        exactly once in the KV store's state."""
+        exactly once in the KV store's state. Runs under deterministic
+        simulation — 20% loss means a retry storm whose backoff is all
+        virtual time."""
         from repro.services.kv_store import SpeculativeKVStore
 
-        link = LinkSpec(latency_ms=0.1, loss_prob=0.2)
-        c = self._cluster(tmp_path, link, n_shards=2)
-        c.add("kv", lambda: SpeculativeKVStore(tmp_path / "kv"))
-        c.add("ctr", make_counter(tmp_path, "ctr"))
-        total = 20
-        h = None
-        for i in range(total):
-            v, h = c.send(None, "ctr", "increment", h)
-        assert v == total  # retries never double-incremented
-        c.send(None, "kv", "put", "k", "v1", h)
-        got = c.send(None, "kv", "get", "k", h)
-        assert got[0] == "v1"
-        c.shutdown()
+        sim = SimCluster(
+            tmp_path,
+            seed=11,
+            n_shards=2,
+            default_link=LinkSpec(latency_ms=0.1, loss_prob=0.2),
+            refresh_interval=None,
+            group_commit_interval=0.005,
+            call_timeout=3.0,
+        )
+
+        def scenario(sim: SimCluster):
+            sim.add("kv", lambda: SpeculativeKVStore(tmp_path / "kv"))
+            sim.add("ctr", make_counter(tmp_path, "ctr"))
+            total = 20
+            h = None
+            for i in range(total):
+                v, h = sim.send(None, "ctr", "increment", h)
+            assert v == total  # retries never double-incremented
+            sim.send(None, "kv", "put", "k", "v1", h)
+            got = sim.send(None, "kv", "get", "k", h)
+            assert got[0] == "v1"
+
+        result = sim.run(scenario, monitor_interval=None)
+        assert result.transport_stats["dropped_loss"] > 0

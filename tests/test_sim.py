@@ -1,0 +1,442 @@
+"""Deterministic simulation runtime tests (repro.sim, DESIGN.md §8):
+
+* SimScheduler primitives — virtual sleep jumps time (no wall-clock cost),
+  cooperative events / locks / conditions, deadlock + virtual-timeout
+  detection, background-task failure surfacing;
+* the acceptance property — the same scenario run twice with the same seed
+  yields BYTE-IDENTICAL event traces, while two different seeds diverge;
+* FaultPlan — seed-derived schedules are deterministic, serialisation
+  round-trips, and ``without`` (the shrinking primitive) works;
+* invariant checkers — linearizability (Wing–Gong), exactly-once counter
+  acks, watermark monotonicity, shard-log prefix consistency — each on both
+  a passing and a failing example;
+* SimCluster — the whole DSE stack (runtime, coordinator shards, transport)
+  under virtual time, running faster than the virtual seconds it simulates.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import pytest
+
+from repro.core.clock import RealClock
+from repro.sim import (
+    FaultPlan,
+    KVModel,
+    Op,
+    PENDING,
+    SimCluster,
+    SimDeadlock,
+    SimScheduler,
+    SimTaskError,
+    SimTimeout,
+    WatermarkMonitor,
+    check_exactly_once_counter,
+    check_linearizable,
+    check_shard_logs,
+)
+from repro.sim.explore import run_one
+
+
+# --------------------------------------------------------------------------- #
+# scheduler primitives                                                         #
+# --------------------------------------------------------------------------- #
+class TestSimScheduler:
+    def test_virtual_sleep_costs_no_wall_clock(self):
+        sched = SimScheduler(seed=0)
+        t0 = time.monotonic()
+
+        def main():
+            sched.clock.sleep(60.0)  # a whole virtual minute
+            return sched.now
+
+        assert sched.run(main) == pytest.approx(60.0)
+        assert time.monotonic() - t0 < 5.0  # ran in wall milliseconds
+
+    def test_time_jumps_to_next_deadline(self):
+        sched = SimScheduler(seed=0)
+        wakes = []
+
+        def sleeper(d):
+            sched.clock.sleep(d)
+            wakes.append(sched.now)
+
+        def main():
+            ts = [sched.clock.spawn(lambda d=d: sleeper(d)) for d in (5.0, 1.0, 3.0)]
+            for t in ts:
+                t.join()
+
+        sched.run(main)
+        assert wakes == [1.0, 3.0, 5.0]  # deadline order, not spawn order
+
+    def test_event_set_wakes_waiter(self):
+        sched = SimScheduler(seed=0)
+
+        def main():
+            ev = sched.clock.event()
+            got = []
+
+            def waiter():
+                got.append(ev.wait(10.0))
+
+            t = sched.clock.spawn(waiter)
+            sched.clock.sleep(0.5)
+            ev.set()
+            t.join()
+            return got, sched.now
+
+        got, now = sched.run(main)
+        assert got == [True]
+        assert now == pytest.approx(0.5)  # woke at set(), not the timeout
+
+    def test_event_wait_times_out_in_virtual_time(self):
+        sched = SimScheduler(seed=0)
+
+        def main():
+            ev = sched.clock.event()
+            ok = ev.wait(2.5)
+            return ok, sched.now
+
+        ok, now = sched.run(main)
+        assert not ok
+        assert now == pytest.approx(2.5)
+
+    def test_lock_mutual_exclusion(self):
+        sched = SimScheduler(seed=3)
+
+        def main():
+            mu = sched.clock.lock()
+            trace = []
+
+            def worker(name):
+                for _ in range(5):
+                    with mu:
+                        trace.append((name, "in"))
+                        sched.clock.sleep(0.01)  # hold across a yield
+                        trace.append((name, "out"))
+
+            ts = [sched.clock.spawn(lambda n=n: worker(n)) for n in "ab"]
+            for t in ts:
+                t.join()
+            return trace
+
+        trace = sched.run(main)
+        # never two "in"s without an "out" between them
+        depth = 0
+        for _, what in trace:
+            depth += 1 if what == "in" else -1
+            assert depth in (0, 1)
+
+    def test_condition_wait_for(self):
+        sched = SimScheduler(seed=0)
+
+        def main():
+            cv = sched.clock.condition()
+            box = {"v": 0}
+
+            def producer():
+                sched.clock.sleep(1.0)
+                with cv:
+                    box["v"] = 42
+                    cv.notify_all()
+
+            sched.clock.spawn(producer)
+            with cv:
+                assert cv.wait_for(lambda: box["v"] == 42, timeout=5.0)
+            return box["v"], sched.now
+
+        v, now = sched.run(main)
+        assert v == 42
+        assert now == pytest.approx(1.0)
+
+    def test_deadlock_detected(self):
+        sched = SimScheduler(seed=0)
+
+        def main():
+            sched.clock.event().wait()  # no timeout, nobody will set it
+
+        with pytest.raises(SimDeadlock):
+            sched.run(main)
+
+    def test_virtual_timeout_detected(self):
+        sched = SimScheduler(seed=0)
+
+        def main():
+            sched.clock.sleep(10_000.0)
+
+        with pytest.raises(SimTimeout):
+            sched.run(main, max_virtual_time=60.0)
+
+    def test_background_task_failure_surfaces(self):
+        sched = SimScheduler(seed=0)
+
+        def main():
+            def dies():
+                raise ValueError("background boom")
+
+            t = sched.clock.spawn(dies)
+            t.join()
+
+        with pytest.raises(SimTaskError, match="background boom"):
+            sched.run(main)
+
+    def test_root_task_exception_propagates(self):
+        sched = SimScheduler(seed=0)
+
+        def main():
+            raise KeyError("root boom")
+
+        with pytest.raises(KeyError):
+            sched.run(main)
+
+    def test_primitive_outside_task_rejected(self):
+        sched = SimScheduler(seed=0)
+        with pytest.raises(RuntimeError, match="outside a simulation task"):
+            sched.clock.sleep(1.0)
+
+
+# --------------------------------------------------------------------------- #
+# determinism: the acceptance property                                         #
+# --------------------------------------------------------------------------- #
+def _chaotic_workload(sched: SimScheduler):
+    """A workload with real scheduling freedom: the trace differs between
+    seeds unless the scheduler's RNG pins every choice."""
+
+    def main():
+        mu = sched.clock.lock()
+        ev = sched.clock.event()
+        out = []
+
+        def worker(i):
+            for j in range(4):
+                with mu:
+                    out.append((i, j, round(sched.now, 6)))
+                sched.clock.sleep(0.001 * ((i + j) % 3 + 1))
+            if i == 0:
+                ev.set()
+
+        ts = [sched.clock.spawn(lambda i=i: worker(i)) for i in range(4)]
+        ev.wait(5.0)
+        for t in ts:
+            t.join()
+        return out
+
+    return sched.run(main)
+
+
+class TestDeterminism:
+    def test_same_seed_identical_trace_scheduler(self):
+        runs = []
+        for _ in range(2):
+            sched = SimScheduler(seed=1234)
+            value = _chaotic_workload(sched)
+            runs.append((value, sched.trace_text()))
+        assert runs[0][0] == runs[1][0]
+        assert runs[0][1].encode() == runs[1][1].encode()  # byte-identical
+
+    def test_different_seeds_diverge_scheduler(self):
+        traces = []
+        for seed in (1, 2):
+            sched = SimScheduler(seed=seed)
+            _chaotic_workload(sched)
+            traces.append(sched.trace_text())
+        assert traces[0] != traces[1]
+
+    def test_same_seed_identical_trace_full_stack(self, tmp_path):
+        """Acceptance criterion on a REAL scenario: the whole DSE stack —
+        sharded coordinator, transport faults, fault plan, recovery — replays
+        byte-identically from one seed, and a different seed diverges."""
+        r1 = run_one("partition_merge", 7, tmp_path / "w1")
+        r2 = run_one("partition_merge", 7, tmp_path / "w2")
+        r3 = run_one("partition_merge", 8, tmp_path / "w3")
+        assert r1.trace.encode() == r2.trace.encode()
+        assert r1.events == r2.events
+        assert r1.virtual_time == r2.virtual_time
+        assert r1.trace != r3.trace
+
+
+# --------------------------------------------------------------------------- #
+# fault plans                                                                  #
+# --------------------------------------------------------------------------- #
+class TestFaultPlan:
+    def test_random_is_seed_deterministic(self):
+        kw = dict(so_ids=["a", "b"], horizon=1.0, n_shards=2, allow_crash=True)
+        p1 = FaultPlan.random(42, **kw)
+        p2 = FaultPlan.random(42, **kw)
+        p3 = FaultPlan.random(43, **kw)
+        assert p1.dumps() == p2.dumps()
+        assert p1.dumps() != p3.dumps()
+
+    def test_serialisation_round_trip(self):
+        plan = (
+            FaultPlan()
+            .crash(0.1, "prod")
+            .partition(0.2, ["coord/0"], ["coord/1"])
+            .heal(0.4)
+            .method_link(0.3, "report", loss_prob=0.5)
+        )
+        again = FaultPlan.loads(plan.dumps())
+        assert again.to_json() == plan.to_json()
+        assert again.loses_state()
+
+    def test_without_drops_events(self):
+        plan = FaultPlan().crash(0.1, "a").heal(0.2).crash(0.3, "b")
+        shrunk = plan.without([0, 2])
+        kinds = [e.kind for e in shrunk.sorted_events()]
+        assert kinds == ["heal"]
+
+    def test_healing_epilogue_always_present(self):
+        plan = FaultPlan.random(9, so_ids=["x"], horizon=2.0, n_shards=2)
+        tail = [e.kind for e in plan.sorted_events() if e.at == 2.0]
+        assert "heal" in tail
+
+
+# --------------------------------------------------------------------------- #
+# invariant checkers                                                           #
+# --------------------------------------------------------------------------- #
+class TestLinearizability:
+    def test_accepts_sequential_history(self):
+        h = [
+            Op("c1", "put", ("k", "v1"), "ok", 0.0, 1.0),
+            Op("c2", "get", ("k",), "v1", 2.0, 3.0),
+            Op("c1", "put", ("k", "v2"), "ok", 4.0, 5.0),
+            Op("c2", "get", ("k",), "v2", 6.0, 7.0),
+        ]
+        assert check_linearizable(h, KVModel) is None
+
+    def test_accepts_concurrent_overlap(self):
+        # put and get overlap: the get may see either value
+        h = [
+            Op("c1", "put", ("k", "v1"), "ok", 0.0, 2.0),
+            Op("c2", "get", ("k",), None, 1.0, 1.5),  # linearizes before the put
+        ]
+        assert check_linearizable(h, KVModel) is None
+
+    def test_rejects_stale_read(self):
+        # put completed strictly before the get was invoked: the get MUST
+        # observe v1, so None is a linearizability violation.
+        h = [
+            Op("c1", "put", ("k", "v1"), "ok", 0.0, 1.0),
+            Op("c2", "get", ("k",), None, 2.0, 3.0),
+        ]
+        assert check_linearizable(h, KVModel) is not None
+
+    def test_rejects_value_from_nowhere(self):
+        h = [Op("c1", "get", ("k",), "ghost", 0.0, 1.0)]
+        assert check_linearizable(h, KVModel) is not None
+
+    def test_pending_op_may_or_may_not_apply(self):
+        # a pending put (crashed mid-flight) explains EITHER read outcome
+        for observed in ("v1", None):
+            h = [
+                Op("c1", "put", ("k", "v1"), PENDING, 0.0, None),
+                Op("c2", "get", ("k",), observed, 1.0, 2.0),
+            ]
+            assert check_linearizable(h, KVModel) is None, observed
+
+
+class TestOtherInvariants:
+    def test_exactly_once_counter(self):
+        assert check_exactly_once_counter([1, 2, 3], 3) is None
+        assert check_exactly_once_counter([1, 2, 2], 3) is not None  # dup ack
+        assert check_exactly_once_counter([1, 2, 4], 3) is not None  # gap
+        assert check_exactly_once_counter([1, 2, 3], 5) is not None  # overshoot
+
+    def test_watermark_monitor(self):
+        ok = WatermarkMonitor()
+        ok.sample(0.0, 0, {"a": 0})
+        ok.sample(0.1, 0, {"a": 2})
+        ok.sample(0.2, 1, {"a": 1})  # retreat allowed: epoch advanced
+        assert ok.check() == []
+
+        bad = WatermarkMonitor()
+        bad.sample(0.0, 0, {"a": 2})
+        bad.sample(0.1, 0, {"a": 1})  # retreat WITHIN the epoch
+        assert bad.check()
+
+    def test_shard_logs_prefix_consistency(self, tmp_path):
+        rec = {"type": "decision", "fsn": 1, "world": 1, "targets": {"a": 0}}
+        (tmp_path / "shard0.jsonl").write_text(json.dumps(rec) + "\n")
+        (tmp_path / "shard1.jsonl").write_text(json.dumps(rec) + "\n")
+        assert check_shard_logs(tmp_path) == []
+        # shard1 diverges on a shared fsn => violation
+        other = dict(rec, targets={"a": 99})
+        (tmp_path / "shard1.jsonl").write_text(json.dumps(other) + "\n")
+        assert check_shard_logs(tmp_path)
+
+    def test_shard_logs_missing_decision(self, tmp_path):
+        rec = {"type": "decision", "fsn": 1, "world": 1, "targets": {}}
+        (tmp_path / "shard0.jsonl").write_text(json.dumps(rec) + "\n")
+        (tmp_path / "shard1.jsonl").write_text("")
+        errors = check_shard_logs(tmp_path)
+        assert any("missing" in e for e in errors)
+
+
+# --------------------------------------------------------------------------- #
+# SimCluster: the whole stack under virtual time                               #
+# --------------------------------------------------------------------------- #
+class TestSimCluster:
+    def test_counter_chain_under_virtual_time(self, tmp_path):
+        from repro.services.counter import CounterStateObject
+
+        sim = SimCluster(tmp_path, seed=5, n_shards=2)
+        t0 = time.monotonic()
+
+        def scenario(sim: SimCluster):
+            sim.add("ctr", lambda: CounterStateObject(sim.root / "so_ctr"))
+            h = None
+            for _ in range(10):
+                v, h = sim.send(None, "ctr", "increment", h)
+            sim.sleep(30.0)  # virtual: free
+            return v
+
+        result = sim.run(scenario)
+        assert result.value == 10
+        assert result.virtual_time >= 30.0
+        assert time.monotonic() - t0 < 30.0  # far less wall than virtual
+
+    def test_fault_plan_drives_crash_and_recovery(self, tmp_path):
+        from repro.services.counter import CounterStateObject
+
+        plan = FaultPlan().crash(0.5, "ctr")
+        sim = SimCluster(tmp_path, seed=5, n_shards=2)
+
+        def scenario(sim: SimCluster):
+            sim.add("ctr", lambda: CounterStateObject(sim.root / "so_ctr"))
+            sim.send(None, "ctr", "increment", None)
+            sim.sleep(1.0)  # ride through the crash at t=0.5
+            ok = sim.settle(
+                lambda: sim.get("ctr").runtime.world >= 1, timeout=30.0
+            )
+            return ok, sim.get("ctr").runtime.world
+
+        ok, world = sim.run(scenario, plan=plan).value
+        assert ok and world >= 1
+
+    def test_scenarios_registry_smoke(self, tmp_path):
+        """Every named explore scenario runs green on seed 0 (each run also
+        exercises its invariant checkers — run_one raises on violation)."""
+        from repro.sim.explore import SCENARIOS
+
+        for name in sorted(SCENARIOS):
+            run_one(name, 0, tmp_path)
+
+
+# --------------------------------------------------------------------------- #
+# clock contract (real side)                                                   #
+# --------------------------------------------------------------------------- #
+class TestRealClock:
+    def test_real_clock_contract_smoke(self):
+        c = RealClock()
+        t0 = c.now()
+        c.sleep(0.001)
+        assert c.now() >= t0 + 0.001
+        ev = c.event()
+        assert not ev.wait(0.001)
+        ev.set()
+        assert ev.wait(0.001)
+        done = []
+        h = c.spawn(lambda: done.append(1))
+        h.join(2.0)
+        assert done == [1]

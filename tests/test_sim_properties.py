@@ -1,0 +1,89 @@
+"""Property-based simulation sweep (hypothesis): random op/fault
+interleavings against SpeculativeKVStore under deterministic simulation must
+stay linearizable.
+
+Every hypothesis example is one seed; the seed derives the client op
+scripts, a benign fault schedule (loss / duplication / delay / partitions /
+shard restarts — nothing that loses application state), and every
+scheduling decision. The recorded history is checked with the Wing–Gong
+linearizability checker. 50 examples, derandomized so CI is reproducible; a
+failing seed should be pinned in ``tests/scenarios/regression_seeds.json``.
+"""
+from __future__ import annotations
+
+import random
+from functools import partial
+from pathlib import Path
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.sim import FaultPlan, KVModel, RecordingClient, SimCluster, check_linearizable  # noqa: E402
+
+
+def _kv_lin_scenario(seed: int, root: Path) -> None:
+    """A compact kv workload (2 clients, 6 ops each) under a seed-derived
+    benign fault schedule; raises if the recorded history is not
+    linearizable. Smaller than explore.kv_scenario so 50 hypothesis examples
+    stay inside the tier-1 time budget."""
+    from repro.services.kv_store import SpeculativeKVStore
+
+    horizon = 0.4
+    plan = FaultPlan.random(
+        seed, so_ids=["kv"], horizon=horizon, n_shards=2, allow_crash=False, max_events=3
+    )
+    rng = random.Random(seed ^ 0x11EA12)
+    keys = ["x", "y"]
+    scripts = [
+        [
+            (rng.choice(["put", "get", "get", "delete"]), rng.choice(keys),
+             f"v{rng.randrange(20)}", rng.uniform(0.0, 0.03))
+            for _ in range(6)
+        ]
+        for _ in range(2)
+    ]
+    sim = SimCluster(
+        root,
+        seed=seed,
+        n_shards=2,
+        refresh_interval=0.005,
+        group_commit_interval=0.01,
+        call_timeout=20.0,
+    )
+
+    def scenario(sim: SimCluster):
+        sim.add("kv", lambda: SpeculativeKVStore(sim.root / "so_kv"))
+
+        def client(i: int) -> None:
+            cli = RecordingClient(sim, "kv", f"cli{i}")
+            for method, key, value, pause in scripts[i]:
+                if method == "put":
+                    cli.put(key, value)
+                elif method == "delete":
+                    cli.delete(key)
+                else:
+                    cli.get(key)
+                sim.sleep(pause)
+
+        tasks = [sim.spawn(partial(client, i), name=f"cli{i}") for i in range(2)]
+        for t in tasks:
+            t.join()
+        sim.sleep(max(0.0, horizon - sim.clock.now()) + 0.05)
+
+    result = sim.run(scenario, plan=plan, monitor_interval=None)
+    err = check_linearizable(result.history, KVModel)
+    assert err is None, f"seed={seed}: {err}"
+
+
+@settings(
+    max_examples=50,
+    deadline=None,
+    derandomize=True,
+    suppress_health_check=[HealthCheck.function_scoped_fixture],
+)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kv_linearizable_under_random_interleavings(seed, tmp_path):
+    _kv_lin_scenario(seed, tmp_path / f"s{seed}")

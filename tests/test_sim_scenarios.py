@@ -1,0 +1,42 @@
+"""Seed-replay regression suite.
+
+``tests/scenarios/regression_seeds.json`` pins previously-interesting
+(scenario, seed) pairs — crash during a group-commit window, partition
+during the cross-shard boundary merge, duplicated fragment resends around a
+coordinator restart. Each replay re-runs the full deterministic simulation
+and its invariant checkers; whenever ``sim/explore.py`` (the CI sim-sweep)
+finds a failing seed, its shrunk fault plan gets appended to the JSON file
+and is replayed here forever after. The randomised counterpart (hypothesis
+over 50 fresh seeds) lives in ``tests/test_sim_properties.py``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.sim import FaultPlan
+from repro.sim.explore import run_one
+
+SCENARIO_FILE = Path(__file__).parent / "scenarios" / "regression_seeds.json"
+
+
+def _pinned():
+    spec = json.loads(SCENARIO_FILE.read_text())
+    return [
+        pytest.param(
+            entry["scenario"],
+            int(entry["seed"]),
+            FaultPlan.from_json(entry["plan"]) if "plan" in entry else None,
+            id=f"{entry['scenario']}-seed{entry['seed']}",
+        )
+        for entry in spec["pinned"]
+    ]
+
+
+@pytest.mark.parametrize("scenario,seed,plan", _pinned())
+def test_pinned_seed_replay(scenario, seed, plan, tmp_path):
+    """Replaying a pinned seed must keep every invariant green — run_one
+    raises InvariantViolation (with the violating seed) otherwise."""
+    run_one(scenario, seed, tmp_path, plan=plan)
