@@ -1,0 +1,213 @@
+"""Coordinator hot-path microbenchmark (boundary / classification / codec).
+
+Measures the three costs the O(delta) refactor targets, so regressions show
+up as numbers rather than folklore:
+
+* ``boundary_*``  — per-report ingest + poll round cost, incremental
+  maintenance vs. the retained from-scratch fixpoint oracle, across member
+  counts and a 10x persisted-history multiplier. The incremental rounds
+  must stay flat as history grows; the oracle scales with graph size.
+* ``poll_idle_*`` — steady-state poll latency when nothing moved:
+  seq-gated delta polls (ship ``None``) vs. force-shipping the boundary
+  dict every 2 ms like the seed did.
+* ``classify_*``  — message classification against 50 accumulated rollback
+  decisions: compacted DecisionIndex vs. the linear decision-list scan.
+* ``codec_*``     — wire bytes + round-trip time, binary codec vs. the
+  legacy JSON encoding, for headers / metadata / report batches.
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core.coordinator import Coordinator
+from repro.core.ids import (
+    DecisionIndex,
+    Header,
+    PersistReport,
+    RollbackDecision,
+    Vertex,
+    encode_metadata,
+    encode_metadata_json,
+    encode_reports,
+    decode_metadata,
+    decode_reports,
+    vertex_rolled_back,
+)
+
+from .common import emit
+
+
+# ------------------------------------------------------------------ #
+# boundary advance                                                   #
+# ------------------------------------------------------------------ #
+def _drive_rounds(coord: Coordinator, ids, rounds: int, oracle: bool, start: int = 1) -> float:
+    """Chain workload: member i's version r depends on member i-1's version
+    r (satisfied in report order, so every report advances the boundary).
+    Every member polls once per round — the runtime's Refresh cadence.
+    Returns mean microseconds per (report + poll)."""
+    t0 = time.perf_counter()
+    for r in range(start, start + rounds):
+        for i, so in enumerate(ids):
+            deps = (Vertex(ids[i - 1], 0, r),) if i else ()
+            coord.report(so, [PersistReport(Vertex(so, 0, r), deps)])
+            if oracle:
+                # what every dirty poll cost before incremental maintenance
+                coord._graph.recoverable_boundary()
+            coord.poll(so, 0)
+    wall = time.perf_counter() - t0
+    return wall / (rounds * len(ids)) * 1e6
+
+
+def _bench_boundary(root: Path, quick: bool):
+    rows = []
+    n_members = 32 if quick else 128
+    base_rounds = 8 if quick else 20
+    ids = [f"so{i:03d}" for i in range(n_members)]
+
+    for label, rounds, oracle in (
+        ("boundary_inc_h1", base_rounds, False),
+        ("boundary_inc_h10", base_rounds * 10, False),
+        ("boundary_oracle_h1", base_rounds, True),
+    ):
+        coord = Coordinator(root / f"{label}.jsonl")
+        for so in ids:
+            coord.connect(so, [])
+        _drive_rounds(coord, ids, 3, oracle)  # warmup: exclude first-touch costs
+        us = _drive_rounds(coord, ids, rounds, oracle, start=4)
+        coord.close()
+        rows.append({"name": label, "us_per_round": round(us, 2)})
+    return rows
+
+
+def _bench_poll_idle(root: Path, quick: bool):
+    rows = []
+    for n_members in (20, 200):
+        ids = [f"so{i:03d}" for i in range(n_members)]
+        coord = Coordinator(root / f"poll{n_members}.jsonl")
+        for so in ids:
+            coord.connect(so, [])
+            coord.report(so, [PersistReport(Vertex(so, 0, 1), ())])
+        resp = coord.poll(ids[0], 0)  # settle the cache
+        seq = resp.boundary_seq
+        n = 2000 if quick else 20000
+        t0 = time.perf_counter()
+        for k in range(n):
+            coord.poll(ids[k % n_members], 0, seq)  # gated: nothing moved
+        gated = (time.perf_counter() - t0) / n * 1e6
+        t0 = time.perf_counter()
+        for k in range(n):
+            coord.poll(ids[k % n_members], 0, -1)  # seed behaviour: full dict
+        full = (time.perf_counter() - t0) / n * 1e6
+        coord.close()
+        rows.append(
+            {
+                "name": f"poll_idle_m{n_members}",
+                "gated_us": round(gated, 3),
+                "full_us": round(full, 3),
+            }
+        )
+    return rows
+
+
+# ------------------------------------------------------------------ #
+# decision compaction                                                #
+# ------------------------------------------------------------------ #
+def _bench_classify(quick: bool):
+    n_decisions = 50
+    n_sos = 20
+    ids = [f"so{i:02d}" for i in range(n_sos)]
+    decisions = [
+        RollbackDecision(
+            fsn=f,
+            failed=ids[f % n_sos],
+            targets={ids[(f + j) % n_sos]: 10 * f + j for j in range(5)},
+        )
+        for f in range(1, n_decisions + 1)
+    ]
+    index = DecisionIndex(decisions)
+    # header-shaped probe set: worlds spread across the fsn range so both
+    # paths exercise early-out and full-scan cases
+    probes = [
+        Vertex(ids[k % n_sos], (k * 7) % (n_decisions + 2), (k * 13) % 600)
+        for k in range(256)
+    ]
+    # equivalence guard: a benchmark comparing two different answers is void
+    for v in probes:
+        assert index.invalidates(v) == vertex_rolled_back(v, decisions)
+
+    n = 20 if quick else 200
+    t0 = time.perf_counter()
+    for _ in range(n):
+        for v in probes:
+            vertex_rolled_back(v, decisions)
+    linear = (time.perf_counter() - t0) / (n * len(probes)) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(n):
+        for v in probes:
+            index.invalidates(v)
+    indexed = (time.perf_counter() - t0) / (n * len(probes)) * 1e6
+    return [
+        {
+            "name": f"classify_d{n_decisions}",
+            "linear_us": round(linear, 4),
+            "indexed_us": round(indexed, 4),
+            "speedup": round(linear / indexed, 2),
+        }
+    ]
+
+
+# ------------------------------------------------------------------ #
+# wire codec                                                         #
+# ------------------------------------------------------------------ #
+def _bench_codec(quick: bool):
+    rows = []
+    header = Header.of(*(Vertex(f"service-{i}", 0, 40 + i) for i in range(3)))
+    legacy_header = json.dumps(sorted(v.to_json() for v in header.deps)).encode()
+    deps = [Vertex(f"service-{i % 4}", 0, i) for i in range(5)]
+    user = bytes(range(64))
+    reports = [
+        PersistReport(
+            Vertex("service-a", 0, v), (Vertex("service-b", 0, v), Vertex("service-c", 0, v))
+        )
+        for v in range(20)
+    ]
+    legacy_reports = json.dumps([r.to_json() for r in reports]).encode()
+
+    n = 2000 if quick else 20000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        Header.decode(header.encode())
+        decode_metadata(encode_metadata(3, 9, deps, user))
+        decode_reports(encode_reports(reports))
+    rt = (time.perf_counter() - t0) / n * 1e6
+    rows.append(
+        {
+            "name": "codec",
+            "roundtrip_us": round(rt, 3),
+            "header_bytes": len(header.encode()),
+            "header_bytes_json": len(legacy_header),
+            "metadata_bytes": len(encode_metadata(3, 9, deps, user)),
+            "metadata_bytes_json": len(encode_metadata_json(3, 9, deps, user)),
+            "reports20_bytes": len(encode_reports(reports)),
+            "reports20_bytes_json": len(legacy_reports),
+        }
+    )
+    return rows
+
+
+def run(quick: bool = True, csv_path=None) -> None:
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        root = Path(td)
+        rows += _bench_boundary(root, quick)
+        rows += _bench_poll_idle(root, quick)
+    rows += _bench_classify(quick)
+    rows += _bench_codec(quick)
+    emit(rows, csv_path)
+
+
+if __name__ == "__main__":
+    run(quick=True)

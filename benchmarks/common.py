@@ -32,7 +32,19 @@ def timer(out: List[float]):
     out.append((time.perf_counter() - t0) * 1e3)
 
 
+# Rows from the last emit() calls, drained by benchmarks.run for --json
+# (suite → "row.metric" → value) machine-readable output.
+_collected: List[Dict] = []
+
+
+def take_collected() -> List[Dict]:
+    out = list(_collected)
+    _collected.clear()
+    return out
+
+
 def emit(rows: List[Dict], csv_path=None) -> None:
+    _collected.extend(rows)
     lines = []
     for r in rows:
         for k, v in r.items():

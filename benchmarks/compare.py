@@ -1,0 +1,92 @@
+"""Perf-smoke comparator: diff a fresh ``benchmarks.run --json`` output
+against a committed baseline (BENCH_PR<N>.json) and fail on regressions.
+
+Usage:
+    python -m benchmarks.compare --baseline BENCH_PR3.json \
+        --current out.json [--suite coordinator] [--threshold 3.0]
+
+Only *time-like* metrics (``*_us``, ``*_ms``, ``us_per_*``, ``*_s``) are
+thresholded — a current value more than ``threshold`` times the baseline
+fails. ``*speedup*`` metrics fail when they drop below baseline/threshold.
+The threshold is deliberately wide: CI runners are noisy, and this step
+exists to catch order-of-magnitude algorithmic regressions (an O(delta)
+path quietly going O(history)), not 20% wobbles. Metrics present in only
+one file are reported but never fail the run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _is_time_metric(name: str) -> bool:
+    metric = name.rsplit(".", 1)[-1]
+    return (
+        metric.endswith("_us")
+        or metric.endswith("_ms")
+        or metric.endswith("_s")
+        or metric.startswith("us_per")
+        or metric.startswith("ms_per")
+    )
+
+
+def _is_speedup_metric(name: str) -> bool:
+    return "speedup" in name.rsplit(".", 1)[-1]
+
+
+def compare(baseline: dict, current: dict, suites, threshold: float):
+    failures, checked = [], 0
+    for suite, base_metrics in sorted(baseline.items()):
+        if suites and suite not in suites:
+            continue
+        cur_metrics = current.get(suite, {})
+        for name, base_val in sorted(base_metrics.items()):
+            cur_val = cur_metrics.get(name)
+            if cur_val is None or not isinstance(base_val, (int, float)):
+                continue
+            if _is_time_metric(name) and base_val > 0:
+                checked += 1
+                ratio = cur_val / base_val
+                line = f"{suite}.{name}: {base_val} -> {cur_val} ({ratio:.2f}x)"
+                if ratio > threshold:
+                    failures.append(line)
+                    print(f"FAIL {line}")
+                else:
+                    print(f"  ok {line}")
+            elif _is_speedup_metric(name) and base_val > 0:
+                checked += 1
+                line = f"{suite}.{name}: {base_val} -> {cur_val}"
+                if cur_val < base_val / threshold:
+                    failures.append(line)
+                    print(f"FAIL {line} (below {base_val / threshold:.2f})")
+                else:
+                    print(f"  ok {line}")
+    return failures, checked
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--suite", action="append", default=None,
+                    help="restrict to suite(s); default: all in baseline")
+    ap.add_argument("--threshold", type=float, default=3.0)
+    args = ap.parse_args()
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    current = json.loads(Path(args.current).read_text())
+    failures, checked = compare(baseline, current, args.suite, args.threshold)
+    print(f"checked {checked} metrics, {len(failures)} regression(s)")
+    if checked == 0:
+        # A gate that matched nothing is a broken gate, not a green one —
+        # suite/metric renames must update the committed baseline too.
+        print("ERROR: no metrics matched between baseline and current")
+        sys.exit(1)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,21 @@
 """Benchmark aggregator: one module per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+                                               [--json PATH]
 Emits ``name,metric,value`` CSV lines (and appends to results/bench.csv).
+``--json`` additionally writes ``{suite: {"row.metric": value}}`` — the
+machine-readable shape committed as BENCH_PR<N>.json baselines and diffed
+by ``benchmarks/compare.py`` in the CI perf-smoke step.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
+
+from . import common
 
 SUITES = [
     ("travel", "bench_travel", "paper Fig. 9"),
@@ -20,14 +27,17 @@ SUITES = [
     ("training", "bench_training_dse", "beyond-paper: DSE training loop"),
     ("net", "bench_net", "beyond-paper: transport fabric + sharded coordinator"),
     ("sim", "bench_sim", "beyond-paper: deterministic simulation scheduler"),
+    ("coordinator", "bench_coordinator", "beyond-paper: O(delta) coordinator hot path"),
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="longer runs")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", action="append", default=None,
+                    help="run only these suite(s); repeatable")
     ap.add_argument("--csv", default="results/bench.csv")
+    ap.add_argument("--json", default=None, help="write suite→metric→value JSON")
     args = ap.parse_args()
 
     csv_path = Path(args.csv)
@@ -36,18 +46,30 @@ def main() -> None:
     import importlib
 
     failures = 0
+    results = {}
     for name, module, figure in SUITES:
-        if args.only and args.only != name:
+        if args.only and name not in args.only:
             continue
         print(f"=== {name} ({figure}) ===", flush=True)
         t0 = time.time()
+        common.take_collected()  # drop rows from a failed prior suite
         try:
             mod = importlib.import_module(f"benchmarks.{module}")
             mod.run(quick=not args.full, csv_path=str(csv_path))
+            results[name] = {
+                f"{r['name']}.{k}": v
+                for r in common.take_collected()
+                for k, v in r.items()
+                if k != "name"
+            }
         except Exception as e:  # keep going; report at the end
             failures += 1
             print(f"FAILED {name}: {e!r}", flush=True)
         print(f"--- {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json).write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {args.json}", flush=True)
     if failures:
         sys.exit(1)
 

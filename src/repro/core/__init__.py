@@ -3,7 +3,7 @@ via message-passing StateObjects, atomic actions, sthreads, speculation
 barriers, and a DPR-derived recovery protocol with a stateless coordinator.
 """
 from .clock import Clock, REAL_CLOCK, RealClock
-from .ids import Header, PersistReport, RollbackDecision, Vertex
+from .ids import DecisionIndex, Header, PersistReport, RollbackDecision, Vertex
 from .epoch import EpochRWLock
 from .graph import DependencyGraph
 from .state_object import StateObject, VersionStore
@@ -16,6 +16,7 @@ __all__ = [
     "Clock",
     "REAL_CLOCK",
     "RealClock",
+    "DecisionIndex",
     "Header",
     "PersistReport",
     "RollbackDecision",

@@ -27,6 +27,7 @@ guarantees a view at least as fresh as the pre-failure one.
 """
 from __future__ import annotations
 
+import bisect
 import json
 import os
 import threading
@@ -36,7 +37,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .clock import Clock, REAL_CLOCK
 from .graph import DependencyGraph
-from .ids import PersistReport, RollbackDecision, Vertex, vertex_rolled_back
+from .ids import DecisionIndex, PersistReport, RollbackDecision, Vertex
 
 
 @dataclass
@@ -46,13 +47,19 @@ class ConnectResponse:
     boundary: Optional[Dict[str, int]]
     #: version the connecting incarnation must Restore to; None => fresh start
     restore_to: Optional[int] = None
+    #: generation of ``boundary`` — quote back via ``poll(known_boundary_seq=)``
+    boundary_seq: int = -1
 
 
 @dataclass
 class PollResponse:
     decisions: List[RollbackDecision] = field(default_factory=list)
+    #: None when the view is incomplete (recovery) OR when the caller's
+    #: ``known_boundary_seq`` is current — nothing moved, no dict shipped.
     boundary: Optional[Dict[str, int]] = None
     resend_fragments: bool = False
+    #: generation counter for delta polls; -1 from pre-seq coordinators
+    boundary_seq: int = -1
 
 
 class CoordinatorLog:
@@ -106,7 +113,11 @@ class Coordinator:
         self._log = CoordinatorLog(log_path)
         self._graph = DependencyGraph()
         self._members: Set[str] = set()
+        #: decisions sorted by fsn, with a parallel fsn list (bisect) and a
+        #: compacted per-SO invalidation index (O(log n) classification)
         self._decisions: List[RollbackDecision] = []
+        self._decision_fsns: List[int] = []
+        self._dindex = DecisionIndex()
         self._fsn = 0
         self._recovery_timeout = recovery_timeout
 
@@ -115,9 +126,7 @@ class Coordinator:
             if rec.get("type") == "member":
                 self._members.add(rec["so_id"])
             elif rec.get("type") == "decision":
-                d = RollbackDecision.from_json(rec)
-                self._decisions.append(d)
-                self._fsn = max(self._fsn, d.fsn)
+                self._note_decision(RollbackDecision.from_json(rec))
         # If members existed, this is a restarted coordinator: the graph view
         # must be rebuilt from participants before boundaries can be served.
         self._awaiting: Set[str] = set(self._members)
@@ -129,35 +138,80 @@ class Coordinator:
 
         self._dirty = True
         self._boundary_cache: Dict[str, int] = {}
+        #: generation of ``_boundary_cache``; bumped on every actual change so
+        #: steady-state polls are answered "nothing moved" without a rebuild
+        self._boundary_seq = 0
+        #: last graph change-counter folded into the cache
+        self._graph_version = -1
 
     # ------------------------------------------------------------------ #
     # helpers                                                            #
     # ------------------------------------------------------------------ #
+    def _note_decision(self, d: RollbackDecision) -> None:
+        """Record a decision in the fsn-sorted list + compacted index
+        (call with self._lock held, or from __init__)."""
+        i = bisect.bisect_left(self._decision_fsns, d.fsn)
+        if i < len(self._decision_fsns) and self._decision_fsns[i] == d.fsn:
+            return  # replayed duplicate
+        self._decision_fsns.insert(i, d.fsn)
+        self._decisions.insert(i, d)
+        self._dindex.add(d)
+        self._fsn = max(self._fsn, d.fsn)
+
+    def _decisions_after(self, known_world: int) -> List[RollbackDecision]:
+        """Decisions with fsn > known_world — O(log n + delta), not a scan
+        (call with self._lock held)."""
+        i = bisect.bisect_right(self._decision_fsns, known_world)
+        return self._decisions[i:]
+
     def _ingest(self, reports: Iterable[PersistReport]) -> None:
         """Incorporate persisted-vertex reports, dropping any vertex an
         existing decision has already invalidated (stale blobs / in-flight
         reports from a pre-rollback incarnation)."""
         for r in reports:
-            if vertex_rolled_back(r.vertex, self._decisions):
+            if self._dindex.invalidates(r.vertex):
                 continue
             deps = [(d.so_id, d.version) for d in r.deps if d.so_id != r.vertex.so_id]
             self._graph.report_persistent(r.vertex.so_id, r.vertex.version, deps)
             self._dirty = True
 
-    def _boundary(self) -> Optional[Dict[str, int]]:
-        """Current recoverable boundary, or None while the view is incomplete
-        (coordinator recovery in progress)."""
+    def _boundary_locked(
+        self, known_seq: Optional[int] = None
+    ) -> Tuple[Optional[Dict[str, int]], int]:
+        """(boundary, seq) — None while the view is incomplete (coordinator
+        recovery in progress), or when the caller already holds generation
+        ``known_seq`` (delta poll: nothing moved, don't even copy the dict).
+        Call with self._lock held."""
+        if self._awaiting:
+            return None, self._boundary_seq
+        if self._dirty:
+            self._dirty = False
+            ver = self._graph.boundary_version()
+            if ver != self._graph_version:
+                ver, bound = self._graph.incremental_boundary()
+                self._graph_version = ver
+                if bound != self._boundary_cache:
+                    self._boundary_cache = bound
+                    self._boundary_seq += 1
+                    # Vertices inside the boundary are immortal: prune their
+                    # dep lists, keeping only the floor watermark (memory
+                    # bound).
+                    for so, b in bound.items():
+                        self._graph.prune(so, b)
+        if known_seq == self._boundary_seq:
+            return None, self._boundary_seq
+        return dict(self._boundary_cache), self._boundary_seq
+
+    # Overridden by CoordinatorShard to defer to the DecisionBus (and then
+    # called WITHOUT self._lock, like the other merged-view hooks below).
+    def _boundary_with_seq(
+        self, known_seq: Optional[int] = None
+    ) -> Tuple[Optional[Dict[str, int]], int]:
         with self._lock:
-            if self._awaiting:
-                return None
-            if self._dirty:
-                self._boundary_cache = self._graph.recoverable_boundary()
-                # Vertices inside the boundary are immortal: prune their dep
-                # lists, keeping only the floor watermark (memory bound).
-                for so, b in self._boundary_cache.items():
-                    self._graph.prune(so, b)
-                self._dirty = False
-            return dict(self._boundary_cache)
+            return self._boundary_locked(known_seq)
+
+    def _boundary(self) -> Optional[Dict[str, int]]:
+        return self._boundary_with_seq()[0]
 
     def _awaiting_changed(self) -> None:
         self.is_awaiting = bool(self._awaiting)
@@ -187,8 +241,7 @@ class Coordinator:
             # Consensus step: the decision must be durable before any
             # participant can observe it (paper §4.3, Orchestrating Rollback).
             self._log.append({"type": "decision", **decision.to_json()})
-            self._fsn = fsn
-            self._decisions.append(decision)
+            self._note_decision(decision)
             for so, t in targets.items():
                 self._graph.truncate(so, t)
             self._dirty = True
@@ -236,10 +289,11 @@ class Coordinator:
             # Snapshot decisions only AFTER the wait: a decision landing
             # during the (up to recovery_timeout) window must filter `valid`.
             decisions = self._all_decisions()
+            idx = DecisionIndex(decisions)
             valid = [
                 r.vertex.version
                 for r in fragments
-                if r.vertex.so_id == so_id and not vertex_rolled_back(r.vertex, decisions)
+                if r.vertex.so_id == so_id and not idx.invalidates(r.vertex)
             ]
             surviving = max(valid, default=-1)
             decision = self._decide(so_id, surviving)
@@ -250,11 +304,13 @@ class Coordinator:
             # world while restore_to predates it — the runtime would set
             # world past its fsn and never apply it. Later decisions in the
             # (fresh) decision list are applied via poll, which is safe.
+            boundary, bseq = self._boundary_with_seq()
             return ConnectResponse(
                 world=decision.fsn,
                 decisions=self._all_decisions(),
-                boundary=self._boundary(),
+                boundary=boundary,
                 restore_to=restore_to,
+                boundary_seq=bseq,
             )
 
         # -- first connect ------------------------------------------------------
@@ -266,19 +322,22 @@ class Coordinator:
         # its fsn — never applied, permanently wrong state.
         world = self._world()
         decisions = self._all_decisions()
+        idx = DecisionIndex(decisions)
         valid = [
             r.vertex.version
             for r in fragments
-            if r.vertex.so_id == so_id and not vertex_rolled_back(r.vertex, decisions)
+            if r.vertex.so_id == so_id and not idx.invalidates(r.vertex)
         ]
         # Adoption: an unknown member with durable state (e.g. a fresh
         # coordinator log) resumes from its own latest valid version.
         restore_to = max(valid) if valid else None
+        boundary, bseq = self._boundary_with_seq()
         return ConnectResponse(
             world=world,
             decisions=decisions,
-            boundary=self._boundary(),
+            boundary=boundary,
             restore_to=restore_to,
+            boundary_seq=bseq,
         )
 
     def report(self, so_id: str, reports: Sequence[PersistReport]) -> None:
@@ -294,13 +353,21 @@ class Coordinator:
             self._recovered_cv.notify_all()
             self._dirty = True
 
-    def poll(self, so_id: str, known_world: int) -> PollResponse:
+    def poll(self, so_id: str, known_world: int, known_boundary_seq: int = -1) -> PollResponse:
+        # One critical section for resend-check + decision delta + boundary
+        # (the seed took the lock three times per poll). CoordinatorShard
+        # overrides this with the hook-based variant: its decision/boundary
+        # sources live on the DecisionBus and must be reached without the
+        # shard lock held (cross-shard deadlock, see the hook comment above).
         with self._lock:
             resend = so_id in self._awaiting
+            decisions = self._decisions_after(known_world)
+            boundary, seq = self._boundary_locked(known_boundary_seq)
         return PollResponse(
-            decisions=[d for d in self._all_decisions() if d.fsn > known_world],
-            boundary=self._boundary(),
+            decisions=decisions,
+            boundary=boundary,
             resend_fragments=resend,
+            boundary_seq=seq,
         )
 
     # ------------------------------------------------------------------ #

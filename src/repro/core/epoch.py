@@ -67,7 +67,16 @@ class EpochRWLock:
         s = self._stripe()
         with self._stripe_locks[s]:
             self._stripe_counts[s] -= 1
-        if self._bias_revoked:
+            stripe_drained = self._stripe_counts[s] == 0
+        # Wake the writer only when this stripe drained to zero: the LAST
+        # release on any stripe always hits zero, so the writer (which
+        # re-counts all stripes on each wakeup) cannot miss the global-zero
+        # transition — and intermediate releases stay off the mutex. The
+        # flag read is racy by design: under a total instruction order (the
+        # GIL), a release that misses a concurrent writer's flag-set
+        # happened-before the writer's reader count, which then sees the
+        # decrement.
+        if stripe_drained and self._bias_revoked:
             with self._mutex:
                 self._writer_cv.notify_all()
 
@@ -83,10 +92,13 @@ class EpochRWLock:
         with self._mutex:
             self._writers_waiting += 1
             self._bias_revoked = True
-            while self._writer_active:
+            # One combined predicate, no poll timeout: release_shared
+            # notifies whenever a stripe drains to zero (covering the last
+            # reader's exit) and release_exclusive notifies the next writer.
+            # writer_active must be re-checked on every wakeup — two writers
+            # can both be parked waiting for readers, and only one may win.
+            while self._writer_active or self._readers_total() > 0:
                 self._writer_cv.wait()
-            while self._readers_total() > 0:
-                self._writer_cv.wait(timeout=0.001)
             self._writer_active = True
             self._writers_waiting -= 1
 

@@ -8,12 +8,114 @@ Message *headers* carry the dependency set of the sending entity. A
 StateObject-originated message carries exactly its current in-progress
 vertex; an sthread-originated message carries the sthread's accumulated
 dependency set (paper §4.2, Instrumentation Protocol).
+
+Wire encoding (DESIGN.md §9): every protocol blob is struct-packed binary
+with per-blob so_id interning — first byte ``0xD5``, then a kind byte, a
+string table, and varint-packed vertices. JSON is kept as the *versioned
+fallback*: blobs whose first byte is ``{`` or ``[`` are legacy JSON and
+decode transparently (old persisted metadata, old coordinator logs).
 """
 from __future__ import annotations
 
+import bisect
 import json
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Iterable, Mapping, Optional, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+
+# --------------------------------------------------------------------------- #
+# binary primitives: varints + per-blob string interning                      #
+# --------------------------------------------------------------------------- #
+WIRE_MAGIC = 0xD5  # cannot start a JSON document (``{`` = 0x7B, ``[`` = 0x5B)
+
+K_HEADER = 1
+K_METADATA = 2
+K_REPORT = 3
+K_REPORTS = 4
+K_DECISION = 5
+K_DECISIONS = 6
+K_BOUNDARY = 7
+
+
+def _w_uvarint(out: bytearray, n: int) -> None:
+    if n < 0:
+        raise ValueError(f"uvarint cannot encode negative {n}")
+    while n >= 0x80:
+        out.append((n & 0x7F) | 0x80)
+        n >>= 7
+    out.append(n)
+
+
+def _r_uvarint(buf: bytes, i: int) -> Tuple[int, int]:
+    shift = 0
+    n = 0
+    while True:
+        b = buf[i]
+        i += 1
+        n |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return n, i
+        shift += 7
+
+
+def _w_svarint(out: bytearray, n: int) -> None:
+    # zigzag: small negatives (watermark -1) stay 1 byte
+    _w_uvarint(out, (n << 1) if n >= 0 else ((-n) << 1) - 1)
+
+
+def _r_svarint(buf: bytes, i: int) -> Tuple[int, int]:
+    z, i = _r_uvarint(buf, i)
+    return (z >> 1) ^ -(z & 1), i
+
+
+class _StrTable:
+    """Encode-side so_id interning: each distinct string is written once in
+    the blob's string table and referenced by index everywhere else."""
+
+    def __init__(self) -> None:
+        self._idx: Dict[str, int] = {}
+        self.strings: List[str] = []
+
+    def index(self, s: str) -> int:
+        i = self._idx.get(s)
+        if i is None:
+            i = self._idx[s] = len(self.strings)
+            self.strings.append(s)
+        return i
+
+    def write(self, out: bytearray) -> None:
+        _w_uvarint(out, len(self.strings))
+        for s in self.strings:
+            raw = s.encode("utf-8")
+            _w_uvarint(out, len(raw))
+            out += raw
+
+    @staticmethod
+    def read(buf: bytes, i: int) -> Tuple[List[str], int]:
+        n, i = _r_uvarint(buf, i)
+        strings: List[str] = []
+        for _ in range(n):
+            ln, i = _r_uvarint(buf, i)
+            strings.append(buf[i : i + ln].decode("utf-8"))
+            i += ln
+        return strings, i
+
+
+def _begin(kind: int) -> Tuple[bytearray, bytearray, _StrTable]:
+    """Returns (prefix, body, table); finish with ``_finish``. The table is
+    written between prefix and body so decoders can resolve indices."""
+    return bytearray((WIRE_MAGIC, kind)), bytearray(), _StrTable()
+
+
+def _finish(prefix: bytearray, body: bytearray, tab: _StrTable) -> bytes:
+    tab.write(prefix)
+    return bytes(prefix + body)
+
+
+def _expect(raw: bytes, kind: int) -> Tuple[List[str], int]:
+    if raw[0] != WIRE_MAGIC or raw[1] != kind:
+        raise ValueError(f"not a binary kind={kind} blob (starts {raw[:2]!r})")
+    return _StrTable.read(raw, 2)
 
 
 @dataclass(frozen=True, order=True)
@@ -36,6 +138,19 @@ class Vertex:
         return f"{self.so_id}_{self.version}^{self.world}"
 
 
+def _write_vertex(out: bytearray, tab: _StrTable, v: Vertex) -> None:
+    _w_uvarint(out, tab.index(v.so_id))
+    _w_svarint(out, v.world)
+    _w_svarint(out, v.version)
+
+
+def _read_vertex(buf: bytes, i: int, strings: List[str]) -> Tuple[Vertex, int]:
+    si, i = _r_uvarint(buf, i)
+    world, i = _r_svarint(buf, i)
+    version, i = _r_svarint(buf, i)
+    return Vertex(strings[si], world, version), i
+
+
 @dataclass(frozen=True)
 class Header:
     """Opaque libDSE message header (paper Table 2).
@@ -48,11 +163,23 @@ class Header:
     deps: FrozenSet[Vertex] = frozenset()
 
     def encode(self) -> bytes:
-        return json.dumps(sorted(v.to_json() for v in self.deps)).encode()
+        prefix, body, tab = _begin(K_HEADER)
+        _w_uvarint(body, len(self.deps))
+        for v in sorted(self.deps):  # canonical order: equal headers, equal bytes
+            _write_vertex(body, tab, v)
+        return _finish(prefix, body, tab)
 
     @staticmethod
     def decode(raw: bytes) -> "Header":
-        return Header(frozenset(Vertex.from_json(o) for o in json.loads(raw.decode())))
+        if raw[:1] == b"[":  # legacy JSON header
+            return Header(frozenset(Vertex.from_json(o) for o in json.loads(raw.decode())))
+        strings, i = _expect(raw, K_HEADER)
+        n, i = _r_uvarint(raw, i)
+        deps = []
+        for _ in range(n):
+            v, i = _read_vertex(raw, i, strings)
+            deps.append(v)
+        return Header(frozenset(deps))
 
     def merge(self, other: "Header") -> "Header":
         return Header(self.deps | other.deps)
@@ -108,6 +235,67 @@ def vertex_rolled_back(v: Vertex, decisions: Iterable[RollbackDecision]) -> bool
     return any(d.invalidates(v) for d in decisions)
 
 
+class DecisionIndex:
+    """Compacted per-SO invalidation index over a set of rollback decisions.
+
+    ``vertex_rolled_back`` scans every decision per vertex — O(failures) on
+    the message hot path. This index compacts the decision list into, per
+    SO, the fsns that target it plus suffix-minimum targets, making
+    ``invalidates`` O(log failures):
+
+        v invalidated  ⇔  ∃d: d.fsn > v.world ∧ v.version > d.targets[v.so_id]
+                       ⇔  v.version > min{ d.targets[so] : d.fsn > v.world }
+
+    and the suffix minimum over fsn-sorted targets answers the RHS with one
+    bisect. Soundness: exact by construction — see DESIGN.md §9.
+
+    Not internally locked: callers mutate/read under their own mutex (the
+    coordinator lock / the runtime ``_mu``), matching the lists it replaces.
+    """
+
+    __slots__ = ("_fsns", "_targets", "_sufmin", "max_fsn", "count")
+
+    def __init__(self, decisions: Iterable[RollbackDecision] = ()) -> None:
+        # so_id -> parallel fsn-sorted lists
+        self._fsns: Dict[str, List[int]] = {}
+        self._targets: Dict[str, List[int]] = {}
+        self._sufmin: Dict[str, List[int]] = {}
+        self.max_fsn = 0
+        self.count = 0
+        for d in decisions:
+            self.add(d)
+
+    def add(self, d: RollbackDecision) -> None:
+        self.max_fsn = max(self.max_fsn, d.fsn)
+        self.count += 1
+        for so, target in d.targets.items():
+            fsns = self._fsns.setdefault(so, [])
+            targets = self._targets.setdefault(so, [])
+            i = bisect.bisect_right(fsns, d.fsn)
+            fsns.insert(i, d.fsn)
+            targets.insert(i, int(target))
+            # rebuild the suffix minima for this SO (appends are rare — one
+            # per cluster failure — while lookups are per-message)
+            suf: List[int] = [0] * len(targets)
+            m = targets[-1]
+            for j in range(len(targets) - 1, -1, -1):
+                m = min(m, targets[j])
+                suf[j] = m
+            self._sufmin[so] = suf
+
+    def invalidates(self, v: Vertex) -> bool:
+        fsns = self._fsns.get(v.so_id)
+        if not fsns:
+            return False
+        i = bisect.bisect_right(fsns, v.world)  # first decision with fsn > world
+        if i >= len(fsns):
+            return False
+        return v.version > self._sufmin[v.so_id][i]
+
+    def any_invalid(self, deps: Iterable[Vertex]) -> bool:
+        return any(self.invalidates(dep) for dep in deps)
+
+
 @dataclass
 class PersistReport:
     """StateObject → coordinator report: vertex became durable with deps."""
@@ -126,14 +314,153 @@ class PersistReport:
         )
 
 
+# --------------------------------------------------------------------------- #
+# binary wire codec (DESIGN.md §9)                                            #
+# --------------------------------------------------------------------------- #
+def _write_report_body(body: bytearray, tab: _StrTable, r: PersistReport) -> None:
+    _write_vertex(body, tab, r.vertex)
+    _w_uvarint(body, len(r.deps))
+    for d in r.deps:
+        _write_vertex(body, tab, d)
+
+
+def _read_report_body(raw: bytes, i: int, strings: List[str]) -> Tuple[PersistReport, int]:
+    vertex, i = _read_vertex(raw, i, strings)
+    n, i = _r_uvarint(raw, i)
+    deps = []
+    for _ in range(n):
+        d, i = _read_vertex(raw, i, strings)
+        deps.append(d)
+    return PersistReport(vertex, tuple(deps)), i
+
+
+def encode_report(r: PersistReport) -> bytes:
+    prefix, body, tab = _begin(K_REPORT)
+    _write_report_body(body, tab, r)
+    return _finish(prefix, body, tab)
+
+
+def decode_report(raw: bytes) -> PersistReport:
+    strings, i = _expect(raw, K_REPORT)
+    r, _ = _read_report_body(raw, i, strings)
+    return r
+
+
+def encode_reports(reports: Sequence[PersistReport]) -> bytes:
+    """Batch encoding with ONE shared string table: a fragment resend of a
+    whole SO history names each dep SO once, not once per vertex."""
+    prefix, body, tab = _begin(K_REPORTS)
+    _w_uvarint(body, len(reports))
+    for r in reports:
+        _write_report_body(body, tab, r)
+    return _finish(prefix, body, tab)
+
+
+def decode_reports(raw: bytes) -> List[PersistReport]:
+    strings, i = _expect(raw, K_REPORTS)
+    n, i = _r_uvarint(raw, i)
+    out: List[PersistReport] = []
+    for _ in range(n):
+        r, i = _read_report_body(raw, i, strings)
+        out.append(r)
+    return out
+
+
+def _write_decision_body(body: bytearray, tab: _StrTable, d: RollbackDecision) -> None:
+    _w_uvarint(body, d.fsn)
+    _w_uvarint(body, tab.index(d.failed))
+    _w_uvarint(body, len(d.targets))
+    for so, t in sorted(d.targets.items()):
+        _w_uvarint(body, tab.index(so))
+        _w_svarint(body, t)
+
+
+def _read_decision_body(raw: bytes, i: int, strings: List[str]) -> Tuple[RollbackDecision, int]:
+    fsn, i = _r_uvarint(raw, i)
+    fi, i = _r_uvarint(raw, i)
+    n, i = _r_uvarint(raw, i)
+    targets: Dict[str, int] = {}
+    for _ in range(n):
+        si, i = _r_uvarint(raw, i)
+        t, i = _r_svarint(raw, i)
+        targets[strings[si]] = t
+    return RollbackDecision(fsn=fsn, failed=strings[fi], targets=targets), i
+
+
+def encode_decision(d: RollbackDecision) -> bytes:
+    prefix, body, tab = _begin(K_DECISION)
+    _write_decision_body(body, tab, d)
+    return _finish(prefix, body, tab)
+
+
+def decode_decision(raw: bytes) -> RollbackDecision:
+    strings, i = _expect(raw, K_DECISION)
+    d, _ = _read_decision_body(raw, i, strings)
+    return d
+
+
+def encode_decisions(decisions: Sequence[RollbackDecision]) -> bytes:
+    prefix, body, tab = _begin(K_DECISIONS)
+    _w_uvarint(body, len(decisions))
+    for d in decisions:
+        _write_decision_body(body, tab, d)
+    return _finish(prefix, body, tab)
+
+
+def decode_decisions(raw: bytes) -> List[RollbackDecision]:
+    strings, i = _expect(raw, K_DECISIONS)
+    n, i = _r_uvarint(raw, i)
+    out: List[RollbackDecision] = []
+    for _ in range(n):
+        d, i = _read_decision_body(raw, i, strings)
+        out.append(d)
+    return out
+
+
+def encode_boundary(boundary: Mapping[str, int]) -> bytes:
+    prefix, body, tab = _begin(K_BOUNDARY)
+    _w_uvarint(body, len(boundary))
+    for so, w in sorted(boundary.items()):
+        _w_uvarint(body, tab.index(so))
+        _w_svarint(body, w)
+    return _finish(prefix, body, tab)
+
+
+def decode_boundary(raw: bytes) -> Dict[str, int]:
+    strings, i = _expect(raw, K_BOUNDARY)
+    n, i = _r_uvarint(raw, i)
+    out: Dict[str, int] = {}
+    for _ in range(n):
+        si, i = _r_uvarint(raw, i)
+        w, i = _r_svarint(raw, i)
+        out[strings[si]] = w
+    return out
+
+
 def encode_metadata(world: int, version: int, deps: Iterable[Vertex], user: bytes = b"") -> bytes:
     """Serialize the dependency-graph fragment persisted with each version.
 
     The paper (§4.3, Finding Boundaries) persists graph fragments inside each
     StateObject via the ``metadata`` argument of ``Persist`` — this is the
     distributed point of truth that a recovering coordinator reassembles.
-    ``user`` carries service-specific metadata piggybacked on the same blob.
+    ``user`` carries service-specific metadata piggybacked on the same blob
+    (as raw bytes; the legacy JSON format hex-doubled them).
     """
+    prefix, body, tab = _begin(K_METADATA)
+    _w_svarint(body, world)
+    _w_svarint(body, version)
+    deps = list(deps)
+    _w_uvarint(body, len(deps))
+    for d in deps:
+        _write_vertex(body, tab, d)
+    _w_uvarint(body, len(user))
+    body += user
+    return _finish(prefix, body, tab)
+
+
+def encode_metadata_json(world: int, version: int, deps: Iterable[Vertex], user: bytes = b"") -> bytes:
+    """Legacy (pre-binary) metadata format, retained as the versioned
+    fallback writer so tests can pin old-blob compatibility forever."""
     blob = {
         "world": world,
         "version": version,
@@ -144,10 +471,21 @@ def encode_metadata(world: int, version: int, deps: Iterable[Vertex], user: byte
 
 
 def decode_metadata(raw: bytes) -> Tuple[int, int, Tuple[Vertex, ...], bytes]:
-    obj = json.loads(raw.decode())
-    return (
-        int(obj["world"]),
-        int(obj["version"]),
-        tuple(Vertex.from_json(d) for d in obj["deps"]),
-        bytes.fromhex(obj.get("user", "")),
-    )
+    if raw[:1] == b"{":  # legacy JSON blob persisted by an older build
+        obj = json.loads(raw.decode())
+        return (
+            int(obj["world"]),
+            int(obj["version"]),
+            tuple(Vertex.from_json(d) for d in obj["deps"]),
+            bytes.fromhex(obj.get("user", "")),
+        )
+    strings, i = _expect(raw, K_METADATA)
+    world, i = _r_svarint(raw, i)
+    version, i = _r_svarint(raw, i)
+    n, i = _r_uvarint(raw, i)
+    deps = []
+    for _ in range(n):
+        d, i = _read_vertex(raw, i, strings)
+        deps.append(d)
+    ulen, i = _r_uvarint(raw, i)
+    return world, version, tuple(deps), bytes(raw[i : i + ulen])

@@ -22,6 +22,7 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Set, TYPE_CHECKING
 
 from .clock import Clock, REAL_CLOCK
 from .ids import (
+    DecisionIndex,
     Header,
     PersistReport,
     RollbackDecision,
@@ -80,7 +81,13 @@ class DSERuntime:
         self._labels: List[int] = []
 
         self._decisions: List[RollbackDecision] = []
+        #: compacted invalidation index over ``_decisions`` — message
+        #: classification is O(deps · log failures), not O(deps · failures)
+        self._dindex = DecisionIndex()
         self._boundary: Dict[str, int] = {}
+        #: generation of ``_boundary`` as quoted by the coordinator; polls
+        #: answering with this seq ship no boundary (nothing moved)
+        self._boundary_seq = -1
         self._report_queue: List[PersistReport] = []
         self._last_persist = self.clock.now()
         if config.persist_jitter:
@@ -109,10 +116,18 @@ class DSERuntime:
             fragments.append(PersistReport(Vertex(self.so_id, world, v), deps))
 
         resp = self.coordinator.connect(self.so_id, fragments)
+        idx = DecisionIndex(resp.decisions)
         with self._mu:
             self.world = resp.world
             self._decisions = list(resp.decisions)
+            self._dindex = idx
             self._boundary = dict(resp.boundary or {})
+            # Adopt the seq only alongside an actual boundary: connecting
+            # during an incomplete view (boundary=None) with a current seq
+            # would otherwise gate away the first real boundary ship.
+            self._boundary_seq = (
+                getattr(resp, "boundary_seq", -1) if resp.boundary is not None else -1
+            )
 
         if resp.restore_to is not None:
             # Restarted (or adopted) incarnation: load the prescribed prefix.
@@ -121,9 +136,7 @@ class DSERuntime:
             # decision list, which the coordinator replays durably.
             self.so.Restore(resp.restore_to)
             valid = {
-                r.vertex.version
-                for r in fragments
-                if not any(d.invalidates(r.vertex) for d in resp.decisions)
+                r.vertex.version for r in fragments if not idx.invalidates(r.vertex)
             }
             with self._mu:
                 self._committed = resp.restore_to
@@ -161,22 +174,18 @@ class DSERuntime:
                 if dep.world > self.world:
                     return "delay"
                 if dep.world < self.world:
-                    # Either rolled back or pre-recovery state whose sender
-                    # will retry post-recovery: discard (Def 4.3).
-                    if any(d.invalidates(dep) for d in self._decisions):
-                        return "discard"
-                    # Surviving prefix of an older epoch is adopted state; a
-                    # message from it is stale only if its sender rolled
-                    # back. Conservatively discard per the paper's rule.
+                    # Either rolled back, or the surviving prefix of an older
+                    # epoch whose sender will retry post-recovery — both
+                    # discard (Def 4.3, conservative per the paper's rule).
                     return "discard"
-                if any(d.invalidates(dep) for d in self._decisions):
+                if self._dindex.invalidates(dep):
                     return "discard"
         return "ok"
 
     def any_invalid(self, deps: Iterable[Vertex]) -> bool:
         with self._mu:
             return any(
-                dep.world < self.world or any(d.invalidates(dep) for d in self._decisions)
+                dep.world < self.world or self._dindex.invalidates(dep)
                 for dep in deps
             )
 
@@ -339,9 +348,15 @@ class DSERuntime:
     def _poll_coordinator(self) -> None:
         with self._mu:
             known = self.world
-        resp = self.coordinator.poll(self.so_id, known)
+            known_seq = self._boundary_seq
+        resp = self.coordinator.poll(self.so_id, known, known_seq)
         if resp.resend_fragments:
             self._resend_fragments()
+            with self._mu:
+                # A resend request means the coordinator restarted: its
+                # boundary_seq counter restarted too, so forget ours — the
+                # next poll must ship the full boundary again.
+                self._boundary_seq = -1
         for d in sorted(resp.decisions, key=lambda d: d.fsn):
             self._apply_decision(d)  # Recovery Sequencing Rule (Def 4.2)
         if resp.boundary is not None:
@@ -352,6 +367,7 @@ class DSERuntime:
                 # virtual time) never lets the poll interval elapse.
                 changed = resp.boundary != self._boundary
                 self._boundary = dict(resp.boundary)
+                self._boundary_seq = resp.boundary_seq
                 if changed:
                     self._boundary_cond.notify_all()
             self._apply_prune()
@@ -404,6 +420,7 @@ class DSERuntime:
                 with self._mu:
                     self.world = d.fsn
                     self._decisions.append(d)
+                    self._dindex.add(d)
             else:
                 assert target is not None
                 # A decision can assign -1 when our synchronous v0 report was
@@ -417,6 +434,7 @@ class DSERuntime:
                 with self._mu:
                     self.world = d.fsn
                     self._decisions.append(d)
+                    self._dindex.add(d)
                     self._committed = min(self._committed, target)
                     self._v_cur = target + 1
                     self._current_deps = set()

@@ -21,6 +21,7 @@ from __future__ import annotations
 from pathlib import Path
 from typing import Callable, Optional
 
+from ..core import ids
 from ..core.clock import Clock, REAL_CLOCK
 from ..core.cluster import LocalCluster
 from ..core.coordinator import Coordinator
@@ -47,8 +48,14 @@ class RemoteCoordinator:
         return self._cluster.coordinator.connect(so_id, fragments)
 
     def report(self, so_id: str, reports) -> None:
+        # Batch-encoded with one shared so_id table (DESIGN.md §9) — a
+        # fragment resend names each dep SO once, not once per vertex.
         self._cluster.transport.call(
-            self._src(), self._cluster.coordinator_endpoint(so_id), "report", so_id, list(reports)
+            self._src(),
+            self._cluster.coordinator_endpoint(so_id),
+            "report",
+            so_id,
+            ids.encode_reports(list(reports)),
         )
 
     def receive_fragments(self, so_id: str, fragments) -> None:
@@ -57,12 +64,17 @@ class RemoteCoordinator:
             self._cluster.coordinator_endpoint(so_id),
             "receive_fragments",
             so_id,
-            list(fragments),
+            ids.encode_reports(list(fragments)),
         )
 
-    def poll(self, so_id: str, known_world: int):
+    def poll(self, so_id: str, known_world: int, known_boundary_seq: int = -1):
         return self._cluster.transport.call(
-            self._src(), self._cluster.coordinator_endpoint(so_id), "poll", so_id, known_world
+            self._src(),
+            self._cluster.coordinator_endpoint(so_id),
+            "poll",
+            so_id,
+            known_world,
+            known_boundary_seq,
         )
 
 
@@ -107,14 +119,28 @@ class NetCluster(LocalCluster):
 
     # Handlers resolve through ``self.coordinator`` on every message so a
     # restarted coordinator (fresh object, same endpoint) keeps working.
+    @staticmethod
+    def _decode_args(method: str, args: tuple) -> tuple:
+        """Report/fragment traffic arrives batch-encoded (see
+        RemoteCoordinator); decode back to PersistReport lists."""
+        if (
+            method in ("report", "receive_fragments")
+            and len(args) == 2
+            and isinstance(args[1], (bytes, bytearray))
+        ):
+            return (args[0], ids.decode_reports(bytes(args[1])))
+        return args
+
     def _coord_handler(self) -> Callable:
         def handle(method: str, *args, **kwargs):
+            args = self._decode_args(method, args)
             return getattr(self.coordinator, method)(*args, **kwargs)
 
         return handle
 
     def _shard_handler(self, idx: int) -> Callable:
         def handle(method: str, *args, **kwargs):
+            args = self._decode_args(method, args)
             return getattr(self.coordinator.shards[idx], method)(*args, **kwargs)
 
         return handle

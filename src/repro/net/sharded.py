@@ -35,7 +35,7 @@ import bisect
 import hashlib
 import threading
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.clock import Clock, REAL_CLOCK
 from ..core.coordinator import ConnectResponse, Coordinator, PollResponse
@@ -115,11 +115,11 @@ class CoordinatorShard(Coordinator):
         """Broadcast arm: durably append a (possibly remote-origin) decision
         to this shard's log and apply its truncations to local members."""
         with self._lock:
-            if any(d.fsn == decision.fsn for d in self._decisions):
-                return
+            i = bisect.bisect_left(self._decision_fsns, decision.fsn)
+            if i < len(self._decision_fsns) and self._decision_fsns[i] == decision.fsn:
+                return  # already committed to this shard's log
             self._log.append({"type": "decision", **decision.to_json()})
-            self._decisions.append(decision)
-            self._fsn = max(self._fsn, decision.fsn)
+            self._note_decision(decision)
             for so, t in decision.targets.items():
                 if so in self._members:
                     self._graph.truncate(so, t)
@@ -136,8 +136,27 @@ class CoordinatorShard(Coordinator):
     def _decide(self, so_id: str, surviving: int) -> RollbackDecision:
         return self._bus.decide(so_id, surviving)
 
+    def _boundary_with_seq(self, known_seq=None):
+        return self._bus.global_boundary_with_seq(known_seq)
+
     def _boundary(self) -> Optional[Dict[str, int]]:
         return self._bus.global_boundary()
+
+    def poll(self, so_id: str, known_world: int, known_boundary_seq: int = -1) -> PollResponse:
+        # Unlike the base class this cannot be one critical section: the
+        # decision/boundary sources live on the DecisionBus and must be
+        # reached WITHOUT this shard's lock held (cross-shard deadlock, see
+        # the hook comment in Coordinator).
+        with self._lock:
+            resend = so_id in self._awaiting
+        decisions = [d for d in self._all_decisions() if d.fsn > known_world]
+        boundary, seq = self._boundary_with_seq(known_boundary_seq)
+        return PollResponse(
+            decisions=decisions,
+            boundary=boundary,
+            resend_fragments=resend,
+            boundary_seq=seq,
+        )
 
     def _ingest(self, reports) -> None:
         super()._ingest(reports)
@@ -168,6 +187,9 @@ class DecisionBus:
         self._recovery_timeout = recovery_timeout
         self._dirty = True
         self._bcache: Dict[str, int] = {}
+        #: generation of ``_bcache`` (guarded by _boundary_mu): lets shard
+        #: polls answer "nothing moved" without shipping the boundary dict
+        self._bseq = 0
 
     # -- membership ------------------------------------------------------- #
     def register_shard(self, shard: CoordinatorShard) -> None:
@@ -241,10 +263,14 @@ class DecisionBus:
             self._clock.sleep(0.002)
 
     # -- global boundary --------------------------------------------------- #
-    def global_boundary(self) -> Optional[Dict[str, int]]:
+    def global_boundary_with_seq(
+        self, known_seq: Optional[int] = None
+    ) -> Tuple[Optional[Dict[str, int]], int]:
         shards = self.shards()
         if any(s.is_awaiting for s in shards):
-            return None  # some shard's view is incomplete: refuse, like §4.3
+            # some shard's view is incomplete: refuse, like §4.3
+            with self._boundary_mu:
+                return None, self._bseq
         with self._boundary_mu:
             dirty = self._dirty
             self._dirty = False
@@ -262,10 +288,17 @@ class DecisionBus:
                             if w < est.get(so, -1):
                                 est[so] = w
                                 changed = True
-                self._bcache = est
+                if est != self._bcache:
+                    self._bcache = est
+                    self._bseq += 1
                 for s in shards:
                     s.prune_to(est)
-            return dict(self._bcache)
+            if known_seq == self._bseq:
+                return None, self._bseq  # nothing moved: no dict shipped
+            return dict(self._bcache), self._bseq
+
+    def global_boundary(self) -> Optional[Dict[str, int]]:
+        return self.global_boundary_with_seq()[0]
 
 
 class ShardedCoordinator:
@@ -314,8 +347,8 @@ class ShardedCoordinator:
     def receive_fragments(self, so_id: str, fragments: Sequence[PersistReport]) -> None:
         self.shard_for(so_id).receive_fragments(so_id, fragments)
 
-    def poll(self, so_id: str, known_world: int) -> PollResponse:
-        return self.shard_for(so_id).poll(so_id, known_world)
+    def poll(self, so_id: str, known_world: int, known_boundary_seq: int = -1) -> PollResponse:
+        return self.shard_for(so_id).poll(so_id, known_world, known_boundary_seq)
 
     # -- failure injection -------------------------------------------------- #
     def restart_shard(self, idx: int) -> CoordinatorShard:

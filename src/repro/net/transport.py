@@ -2,7 +2,8 @@
 
 The paper's libDSE deployment runs StateObjects on real nodes over gRPC; the
 seed repo wires everything with direct in-process calls. This module closes
-the gap with an in-process *fabric*: endpoints exchange pickled envelopes
+the gap with an in-process *fabric*: endpoints exchange wire-encoded
+envelopes (binary DSE protocol codec, ``net/wire.py``)
 carrying DSE :class:`~repro.core.ids.Header` payloads, and every link can be
 configured with latency, jitter, probabilistic loss, reordering, and
 partitions. Delivery is *batched* per endpoint (Netherite-style: one worker
@@ -22,7 +23,6 @@ from __future__ import annotations
 import copy
 import heapq
 import itertools
-import pickle
 import random
 import threading
 from collections import OrderedDict
@@ -31,6 +31,7 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from ..core.clock import Clock, REAL_CLOCK
 from ..core.sthread import DelayMessage
+from . import wire
 
 #: handler(method, *args, **kwargs) -> result
 Handler = Callable[..., Any]
@@ -55,7 +56,7 @@ class Envelope:
     src: str
     dst: str
     method: str
-    payload: bytes  # pickled (args, kwargs) — measurable wire bytes
+    payload: bytes  # wire-encoded (args, kwargs) — measurable wire bytes
     attempt: int = 1
     deliver_at: float = 0.0
     needs_reply: bool = True  # False for cast(): no reply traffic, no dedup
@@ -242,7 +243,7 @@ class _Endpoint:
             # thread is the one failure mode this must never have. Exception,
             # not BaseException: the simulation's TaskCancelled must fly.
             try:
-                args, kwargs = pickle.loads(env.payload)
+                args, kwargs = wire.loads(env.payload)
                 self.handler(env.method, *args, **kwargs)
             except Exception:  # noqa: BLE001
                 pass
@@ -254,9 +255,9 @@ class _Endpoint:
             self._t._send_reply(env, *cached)
             return
         try:
-            args, kwargs = pickle.loads(env.payload)
+            args, kwargs = wire.loads(env.payload)
             result = self.handler(env.method, *args, **kwargs)
-            outcome = ("ok", pickle.dumps(result))
+            outcome = ("ok", wire.dumps(result))
         except DelayMessage:
             # deliberately uncached: the sender retries the SAME msg_id once
             # the receiver has caught up with the failure epoch.
@@ -266,12 +267,12 @@ class _Endpoint:
             # simulation's TaskCancelled (a BaseException) must NOT be caught,
             # cached, and replied — it tears down this worker, nothing else
             try:
-                blob = pickle.dumps(e)
+                blob = wire.dumps(e)
             except Exception:
                 # unpicklable exception (locks, handles, device buffers):
                 # degrade to a picklable stand-in rather than killing the
                 # endpoint worker thread.
-                blob = pickle.dumps(RuntimeError(f"{type(e).__name__}: {e!r}"))
+                blob = wire.dumps(RuntimeError(f"{type(e).__name__}: {e!r}"))
             outcome = ("err", blob)
         self._seen[env.msg_id] = outcome
         while len(self._seen) > self._t.dedup_cache_size:
@@ -462,7 +463,7 @@ class SimTransport(Transport):
 
     # -- RPC ------------------------------------------------------------- #
     def call(self, src: str, dst: str, method: str, *args, timeout: Optional[float] = None, **kwargs):
-        payload = pickle.dumps((args, kwargs))
+        payload = wire.dumps((args, kwargs))
         msg_id = f"{src}:{next(self._msg_seq)}"
         waiter = _Waiter(self.clock)
         with self._waiters_mu:
@@ -482,9 +483,9 @@ class SimTransport(Transport):
                     if result is not None:
                         status, blob = result
                         if status == "ok":
-                            return pickle.loads(blob)
+                            return wire.loads(blob)
                         if status == "err":
-                            raise pickle.loads(blob)
+                            raise wire.loads(blob)
                         # status == "delay": back off, retry the SAME msg_id
                         self.clock.sleep(self.delay_backoff)
                 if self.clock.now() >= deadline:
@@ -496,7 +497,7 @@ class SimTransport(Transport):
                 self._waiters.pop(msg_id, None)
 
     def cast(self, src: str, dst: str, method: str, *args, **kwargs) -> None:
-        payload = pickle.dumps((args, kwargs))
+        payload = wire.dumps((args, kwargs))
         self._send(
             Envelope(
                 f"{src}:{next(self._msg_seq)}", src, dst, method, payload, needs_reply=False

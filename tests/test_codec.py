@@ -1,0 +1,198 @@
+"""Binary wire codec round-trip tests (DESIGN.md §9).
+
+Hypothesis drives header / metadata / report / decision / boundary blobs
+through encode→decode — including non-ASCII so_ids, empty dep sets, and
+negative watermarks — and pins the legacy-JSON fallback so blobs persisted
+by pre-codec builds stay decodable forever.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core.ids import (
+    Header,
+    PersistReport,
+    RollbackDecision,
+    Vertex,
+    WIRE_MAGIC,
+    decode_boundary,
+    decode_decision,
+    decode_decisions,
+    decode_metadata,
+    decode_report,
+    decode_reports,
+    encode_boundary,
+    encode_decision,
+    encode_decisions,
+    encode_metadata,
+    encode_metadata_json,
+    encode_report,
+    encode_reports,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # hypothesis is optional (CI runs a without-matrix leg)
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    # so_ids: printable ASCII and non-ASCII (CJK, umlauts, emoji) — anything
+    # a deployment might name a service; empty excluded (not a legal id).
+    SO_IDS = st.text(
+        alphabet=st.characters(blacklist_categories=("Cs",)), min_size=1, max_size=24
+    )
+    VERSIONS = st.integers(min_value=-1, max_value=2**40)
+    WORLDS = st.integers(min_value=0, max_value=2**20)
+
+    VERTICES = st.builds(Vertex, so_id=SO_IDS, world=WORLDS, version=VERSIONS)
+    HEADERS = st.builds(
+        lambda vs: Header(frozenset(vs)), st.lists(VERTICES, max_size=8)
+    )
+    REPORTS = st.builds(
+        PersistReport, vertex=VERTICES, deps=st.lists(VERTICES, max_size=8).map(tuple)
+    )
+    DECISIONS = st.builds(
+        RollbackDecision,
+        fsn=st.integers(min_value=0, max_value=2**20),
+        failed=SO_IDS,
+        targets=st.dictionaries(SO_IDS, VERSIONS, max_size=8),
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(h=HEADERS)
+    def test_header_round_trip(h):
+        raw = h.encode()
+        assert raw[0] == WIRE_MAGIC
+        assert Header.decode(raw) == h
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        world=WORLDS,
+        version=VERSIONS,
+        deps=st.lists(VERTICES, max_size=8),
+        user=st.binary(max_size=64),
+    )
+    def test_metadata_round_trip(world, version, deps, user):
+        raw = encode_metadata(world, version, deps, user=user)
+        assert decode_metadata(raw) == (world, version, tuple(deps), user)
+
+    @settings(max_examples=200, deadline=None)
+    @given(r=REPORTS)
+    def test_report_round_trip(r):
+        assert decode_report(encode_report(r)) == r
+
+    @settings(max_examples=100, deadline=None)
+    @given(rs=st.lists(REPORTS, max_size=12))
+    def test_report_batch_round_trip(rs):
+        assert decode_reports(encode_reports(rs)) == rs
+
+    @settings(max_examples=100, deadline=None)
+    @given(ds=st.lists(DECISIONS, max_size=8))
+    def test_decision_round_trip(ds):
+        assert decode_decisions(encode_decisions(ds)) == ds
+        for d in ds:
+            assert decode_decision(encode_decision(d)) == d
+
+    @settings(max_examples=100, deadline=None)
+    @given(b=st.dictionaries(SO_IDS, VERSIONS, max_size=12))
+    def test_boundary_round_trip(b):
+        assert decode_boundary(encode_boundary(b)) == b
+
+    @settings(max_examples=100, deadline=None)
+    @given(
+        world=WORLDS,
+        version=VERSIONS,
+        deps=st.lists(VERTICES, max_size=6),
+        user=st.binary(max_size=32),
+    )
+    def test_metadata_legacy_json_fallback(world, version, deps, user):
+        """Blobs persisted by pre-codec builds (JSON, hex-doubled user
+        bytes) must decode identically forever — DESIGN.md §9."""
+        raw = encode_metadata_json(world, version, deps, user=user)
+        assert raw[:1] == b"{"
+        assert decode_metadata(raw) == (world, version, tuple(deps), user)
+
+    @settings(max_examples=100, deadline=None)
+    @given(h=HEADERS)
+    def test_header_legacy_json_fallback(h):
+        legacy = json.dumps(sorted(v.to_json() for v in h.deps)).encode()
+        assert Header.decode(legacy) == h
+
+
+def test_seeded_round_trip_sweep():
+    """Deterministic PRNG sweep over the same blob space — real coverage on
+    the without-hypothesis CI leg and in local quick runs."""
+    import random
+
+    rng = random.Random(20260729)
+    alphabet = "abzü注文🦜-/  \x00"
+
+    def so_id():
+        return "".join(rng.choice(alphabet) for _ in range(rng.randint(1, 12)))
+
+    def vertex():
+        return Vertex(so_id(), rng.randint(0, 2**20), rng.randint(-1, 2**40))
+
+    for _ in range(300):
+        h = Header(frozenset(vertex() for _ in range(rng.randint(0, 6))))
+        assert Header.decode(h.encode()) == h
+        r = PersistReport(vertex(), tuple(vertex() for _ in range(rng.randint(0, 6))))
+        assert decode_report(encode_report(r)) == r
+        rs = [
+            PersistReport(vertex(), tuple(vertex() for _ in range(rng.randint(0, 4))))
+            for _ in range(rng.randint(0, 8))
+        ]
+        assert decode_reports(encode_reports(rs)) == rs
+        world, version = rng.randint(0, 2**20), rng.randint(-1, 2**40)
+        deps = [vertex() for _ in range(rng.randint(0, 6))]
+        user = bytes(rng.randint(0, 255) for _ in range(rng.randint(0, 48)))
+        assert decode_metadata(encode_metadata(world, version, deps, user)) == (
+            world,
+            version,
+            tuple(deps),
+            user,
+        )
+        assert decode_metadata(encode_metadata_json(world, version, deps, user)) == (
+            world,
+            version,
+            tuple(deps),
+            user,
+        )
+        d = RollbackDecision(
+            fsn=rng.randint(0, 2**20),
+            failed=so_id(),
+            targets={so_id(): rng.randint(-1, 2**30) for _ in range(rng.randint(0, 5))},
+        )
+        assert decode_decision(encode_decision(d)) == d
+        b = {so_id(): rng.randint(-1, 2**30) for _ in range(rng.randint(0, 8))}
+        assert decode_boundary(encode_boundary(b)) == b
+
+
+def test_explicit_edge_blobs():
+    # empty dep set, non-ASCII id, empty user bytes
+    h = Header(frozenset())
+    assert Header.decode(h.encode()) == h
+    v = Vertex("注文サービス-ü", 0, 0)
+    assert decode_report(encode_report(PersistReport(v, ()))) == PersistReport(v, ())
+    assert decode_metadata(encode_metadata(0, -1, [], b"")) == (0, -1, (), b"")
+    assert decode_reports(encode_reports([])) == []
+
+
+def test_canonical_header_bytes():
+    """Equal headers encode to equal bytes (deps are sorted canonically) —
+    dedup and caching layers may key on the encoding."""
+    a = Header.of(Vertex("a", 0, 1), Vertex("b", 0, 2))
+    b = Header.of(Vertex("b", 0, 2), Vertex("a", 0, 1))
+    assert a.encode() == b.encode()
+
+
+def test_binary_smaller_than_json():
+    deps = [Vertex("order-service", 0, i) for i in range(8)]
+    user = bytes(range(64))
+    assert len(encode_metadata(1, 9, deps, user)) < len(
+        encode_metadata_json(1, 9, deps, user)
+    )

@@ -364,3 +364,73 @@ class TestCoordinatorRecovery:
         # fragments: connect must block until p has resent, then decide.
         q2 = c.kill("q")
         assert q2.runtime.world == 1
+
+
+# --------------------------------------------------------------------------- #
+# O(delta) hot path: seq-gated polls + compacted decision index (DESIGN §9)    #
+# --------------------------------------------------------------------------- #
+class TestPollDelta:
+    def _coord(self, tmp_path):
+        from repro.core import Coordinator
+
+        return Coordinator(tmp_path / "coord.jsonl")
+
+    def test_poll_gates_boundary_on_seq(self, tmp_path):
+        from repro.core import PersistReport
+
+        coord = self._coord(tmp_path)
+        coord.connect("A", [])
+        coord.report("A", [PersistReport(Vertex("A", 0, 1), ())])
+        first = coord.poll("A", 0)
+        assert first.boundary == {"A": 1}
+        # nothing moved: quoting the seq back elides the boundary entirely
+        again = coord.poll("A", 0, first.boundary_seq)
+        assert again.boundary is None
+        assert again.boundary_seq == first.boundary_seq
+        # progress bumps the seq and ships the new boundary
+        coord.report("A", [PersistReport(Vertex("A", 0, 2), ())])
+        moved = coord.poll("A", 0, first.boundary_seq)
+        assert moved.boundary == {"A": 2}
+        assert moved.boundary_seq > first.boundary_seq
+        coord.close()
+
+    def test_poll_decisions_are_a_delta(self, cluster_factory, tmp_path):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        p = c.add("p", make_counter(tmp_path, "dp"))
+        c.add("q", make_counter(tmp_path, "dq"))
+        p.increment(None)
+        c.kill("p")  # decision fsn=1
+        c.kill("p")  # decision fsn=2
+        assert [d.fsn for d in c.coordinator.poll("q", 0).decisions] == [1, 2]
+        assert [d.fsn for d in c.coordinator.poll("q", 1).decisions] == [2]
+        assert c.coordinator.poll("q", 2).decisions == []
+
+    def test_decision_index_matches_linear_scan(self):
+        from repro.core import DecisionIndex
+        from repro.core.ids import vertex_rolled_back
+
+        decisions = [
+            RollbackDecision(fsn=1, failed="A", targets={"A": 1, "B": 0}),
+            RollbackDecision(fsn=3, failed="B", targets={"B": 4, "C": 2}),
+            RollbackDecision(fsn=5, failed="A", targets={"A": 7, "B": 2}),
+        ]
+        idx = DecisionIndex(decisions)
+        for so in "ABCD":
+            for world in range(7):
+                for version in range(-1, 9):
+                    v = Vertex(so, world, version)
+                    assert idx.invalidates(v) == vertex_rolled_back(v, decisions), v
+
+    def test_runtime_forgets_seq_on_coordinator_restart(
+        self, cluster_factory, tmp_path
+    ):
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
+        p = c.add("p", make_counter(tmp_path, "sp"))
+        p.increment(None)
+        assert wait_committed(p, p.runtime.maybe_persist(force=True))
+        c.refresh_all()
+        assert p.runtime.boundary.get("p", -1) >= 1
+        c.restart_coordinator()
+        c.refresh_all()  # resend_fragments resets the known seq...
+        c.refresh_all()  # ...so the next poll ships the full boundary again
+        assert p.runtime.boundary.get("p", -1) >= 1

@@ -1,0 +1,337 @@
+"""Incremental boundary maintenance == from-scratch fixpoint oracle.
+
+The coordinator hot path maintains the recoverable boundary incrementally
+(waiters index + pending frontier + same-version cycle rescue, DESIGN.md
+§9); ``DependencyGraph.recoverable_boundary()`` keeps the original global
+fixpoint as the slow-path oracle. These tests drive random report /
+rollback interleavings through both and require exact equivalence, plus a
+set of hand-built adversarial shapes (cycles, blocked chains, label gaps).
+"""
+from __future__ import annotations
+
+from repro.core.graph import DependencyGraph
+
+
+def check(g: DependencyGraph) -> None:
+    _, inc = g.incremental_boundary()
+    assert inc == g.recoverable_boundary()
+
+
+class TestIncrementalBoundaryShapes:
+    def test_chain_in_order(self):
+        g = DependencyGraph()
+        for v in range(5):
+            g.report_persistent("A", v, [])
+            g.report_persistent("B", v, [("A", v)])
+            check(g)
+        assert g.incremental_boundary()[1] == {"A": 4, "B": 4}
+
+    def test_chain_out_of_order(self):
+        """B's reports arrive before the A vertices they depend on: B stays
+        cut until A's reports land, then the waiters index cascades."""
+        g = DependencyGraph()
+        for v in range(4):
+            g.report_persistent("B", v, [("A", v)])
+        check(g)
+        assert g.incremental_boundary()[1]["B"] == -1
+        for v in range(4):
+            g.report_persistent("A", v, [])
+            check(g)
+        assert g.incremental_boundary()[1] == {"A": 3, "B": 3}
+
+    def test_same_version_cycle(self):
+        """A_1 <-> B_1 mutual dependency (legal: the commit ordering rule
+        only forces dep.version <= vertex.version) — one-at-a-time
+        admission deadlocks; the frontier rescue must admit the pair."""
+        g = DependencyGraph()
+        g.report_persistent("A", 0, [])
+        g.report_persistent("B", 0, [])
+        g.report_persistent("A", 1, [("B", 1)])
+        check(g)  # blocked: B_1 not persisted yet
+        g.report_persistent("B", 1, [("A", 1)])
+        check(g)
+        assert g.incremental_boundary()[1] == {"A": 1, "B": 1}
+
+    def test_three_way_cycle_with_tail(self):
+        g = DependencyGraph()
+        for so in "ABC":
+            g.report_persistent(so, 0, [])
+        g.report_persistent("A", 2, [("B", 2)])
+        check(g)
+        g.report_persistent("B", 2, [("C", 2)])
+        check(g)
+        g.report_persistent("C", 2, [("A", 2)])
+        check(g)
+        assert g.incremental_boundary()[1] == {"A": 2, "B": 2, "C": 2}
+        # D depends on the cycle after it resolved
+        g.report_persistent("D", 3, [("A", 2)])
+        check(g)
+        assert g.incremental_boundary()[1]["D"] == 3
+
+    def test_label_gap_cut_semantics(self):
+        """Blocked label 5 over persisted labels [0, 5]: the oracle cuts to
+        4 (a non-label watermark); incremental must match exactly."""
+        g = DependencyGraph()
+        g.report_persistent("A", 0, [])
+        g.report_persistent("A", 5, [("B", 5)])
+        check(g)
+        assert g.incremental_boundary()[1]["A"] == 4
+
+    def test_truncate_rebuilds(self):
+        g = DependencyGraph()
+        for v in range(4):
+            g.report_persistent("A", v, [])
+            g.report_persistent("B", v, [("A", v)])
+        g.truncate("A", 1)
+        check(g)
+        # B's vertices above A's surviving prefix are cut by the fixpoint
+        assert g.incremental_boundary()[1] == {"A": 1, "B": 1}
+        # and incremental maintenance resumes after the rebuild
+        g.report_persistent("A", 2, [])
+        g.report_persistent("B", 4, [("A", 2)])
+        check(g)
+
+    def test_prune_above_watermark_invalidates(self):
+        """A sharded caller may prune to an externally-computed boundary
+        above this graph's incremental watermark, removing a blocked label
+        the incremental state still tracks — must rebuild, not wedge
+        (code-review regression)."""
+        g = DependencyGraph()
+        g.report_persistent("a", 4, [])
+        g.report_persistent("a", 3, [("c", 1)])  # blocked: a stuck at 2
+        check(g)
+        assert g.incremental_boundary()[1]["a"] == 2
+        g.prune("a", 8)  # floor moves to label 4, dropping blocked label 3
+        check(g)
+        assert g.incremental_boundary()[1]["a"] == 4
+
+    def test_prune_preserves_boundary(self):
+        g = DependencyGraph()
+        for v in range(6):
+            g.report_persistent("A", v, [])
+            g.report_persistent("B", v, [("A", v)])
+        _, before = g.incremental_boundary()
+        for so, b in before.items():
+            g.prune(so, b)
+        check(g)
+        assert g.incremental_boundary()[1] == before
+
+    def test_boundary_version_monotone_and_quiescent(self):
+        g = DependencyGraph()
+        g.report_persistent("A", 0, [])
+        v1 = g.boundary_version()
+        g.report_persistent("B", 1, [("A", 2)])  # blocked: no advance for B
+        v2 = g.boundary_version()
+        assert v2 >= v1
+        # queries without mutation never bump the version (poll gating)
+        assert g.boundary_version() == v2
+        assert g.boundary_version() == v2
+
+    def test_unknown_dep_so(self):
+        g = DependencyGraph()
+        g.report_persistent("A", 1, [("ghost", 0)])
+        check(g)
+        assert g.incremental_boundary()[1]["A"] == 0
+
+    def test_remove_member_rebuilds(self):
+        g = DependencyGraph()
+        g.report_persistent("A", 0, [])
+        g.report_persistent("B", 1, [("A", 0)])
+        g.remove_member("A")
+        check(g)
+
+    def test_blocked_vertex_arrives_below_watermark(self):
+        """Out-of-order delivery: A@2 (clean) admitted first, then A@1
+        arrives with an unsatisfied dep. The admitted prefix is no longer a
+        closure — the incremental state must fall back to the oracle's cut
+        instead of staying over-advanced (code-review regression)."""
+        g = DependencyGraph()
+        g.report_persistent("A", 2, [])
+        assert g.incremental_boundary()[1] == {"A": 2}
+        g.report_persistent("A", 1, [("B", 5)])
+        check(g)
+        assert g.incremental_boundary()[1]["A"] == 0
+
+    def test_changed_deps_on_blocked_label_reregisters_waiters(self):
+        """Re-reporting the blocked label with a DIFFERENT dep list must
+        re-register waiters on the new deps — otherwise the later advance of
+        the new dep's owner never re-attempts and the boundary wedges
+        (code-review regression; protocol traffic never mutates a persisted
+        vertex, but the public API allows it)."""
+        g = DependencyGraph()
+        g.report_persistent("s2", 0, [("s3", 0)])
+        g.report_persistent("s2", 0, [("s1", 0)])  # dep list replaced
+        g.report_persistent("s1", 2, [])
+        check(g)
+        assert g.incremental_boundary()[1]["s2"] == 0
+
+    def test_satisfied_vertex_below_watermark_keeps_boundary(self):
+        g = DependencyGraph()
+        g.report_persistent("B", 3, [])
+        g.report_persistent("A", 2, [])
+        g.report_persistent("A", 1, [("B", 1)])  # satisfied: no invalidation
+        check(g)
+        assert g.incremental_boundary()[1]["A"] == 2
+
+
+N_SOS = 4
+
+
+def _random_ops(rng, n_ops):
+    """Random report/rollback interleavings honouring the commit ordering
+    rule (dep.version <= vertex.version) that the equivalence argument —
+    and the protocol — rely on. Versions may skip labels (relabeling gaps)
+    and reports may arrive in any cross-SO order."""
+    ops = []
+    next_version = [0] * N_SOS
+    for _ in range(n_ops):
+        so = rng.randrange(N_SOS)
+        if next_version[so] > 0 and rng.random() < 0.15:
+            ops.append(("truncate", so, rng.randint(-1, next_version[so] - 1)))
+            continue
+        version = next_version[so] + rng.randint(0, 2)
+        next_version[so] = version + 1
+        deps = []
+        for dep_so in rng.sample(range(N_SOS), rng.randint(0, 3)):
+            if dep_so == so:
+                continue
+            deps.append((dep_so, rng.randint(0, version)))
+        ops.append(("report", so, version, deps))
+    return ops
+
+
+def _apply(g, op):
+    if op[0] == "report":
+        _, so, version, deps = op
+        g.report_persistent(f"so{so}", version, [(f"so{d}", dv) for d, dv in deps])
+    else:
+        _, so, keep = op
+        g.truncate(f"so{so}", keep)
+
+
+def test_incremental_equals_oracle_seeded_sweep():
+    """Deterministic PRNG sweep: 150 random interleavings, equivalence
+    checked after EVERY op (runs on the without-hypothesis CI leg too)."""
+    import random
+
+    for seed in range(150):
+        rng = random.Random(seed)
+        g = DependencyGraph()
+        for op in _random_ops(rng, rng.randint(1, 40)):
+            _apply(g, op)
+            _, inc = g.incremental_boundary()
+            oracle = g.recoverable_boundary()
+            assert inc == oracle, (
+                f"seed={seed} divergence after {op}: "
+                f"incremental={inc} oracle={oracle}"
+            )
+            if rng.random() < 0.3:
+                for so_id, b in inc.items():
+                    g.prune(so_id, b)
+                assert g.incremental_boundary()[1] == g.recoverable_boundary()
+
+
+def test_incremental_equals_oracle_reordered_delivery():
+    """Reports generated in protocol order but DELIVERED in a windowed
+    shuffle — the fabric reorders, retries, and interleaves concurrent
+    flushes, so vertices routinely land below an already-advanced
+    watermark."""
+    import random
+
+    for seed in range(120):
+        rng = random.Random(10_000 + seed)
+        reports = [op for op in _random_ops(rng, 30) if op[0] == "report"]
+        # windowed shuffle: each report may be delayed by up to 6 slots
+        order = sorted(range(len(reports)), key=lambda i: i + rng.random() * 6)
+        g = DependencyGraph()
+        for i in order:
+            _apply(g, reports[i])
+            _, inc = g.incremental_boundary()
+            oracle = g.recoverable_boundary()
+            assert inc == oracle, (
+                f"seed={seed} divergence after {reports[i]}: "
+                f"incremental={inc} oracle={oracle}"
+            )
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # hypothesis is optional (CI runs a without-matrix leg)
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def op_sequences(draw):
+        n_ops = draw(st.integers(min_value=1, max_value=40))
+        ops = []
+        next_version = [0] * N_SOS
+        for _ in range(n_ops):
+            so = draw(st.integers(min_value=0, max_value=N_SOS - 1))
+            if next_version[so] > 0 and draw(st.booleans()) and draw(st.booleans()):
+                # occasional rollback: truncate to a random surviving prefix
+                keep = draw(st.integers(min_value=-1, max_value=next_version[so] - 1))
+                ops.append(("truncate", so, keep))
+                continue
+            version = next_version[so] + draw(st.integers(min_value=0, max_value=2))
+            next_version[so] = version + 1
+            deps = []
+            for dep_so in draw(
+                st.lists(
+                    st.integers(min_value=0, max_value=N_SOS - 1),
+                    max_size=3,
+                    unique=True,
+                )
+            ):
+                if dep_so == so:
+                    continue
+                deps.append(
+                    (dep_so, draw(st.integers(min_value=0, max_value=version)))
+                )
+            ops.append(("report", so, version, deps))
+        return ops
+
+    @settings(max_examples=120, deadline=None)
+    @given(ops=op_sequences())
+    def test_incremental_equals_oracle_under_random_interleavings(ops):
+        g = DependencyGraph()
+        for op in ops:
+            _apply(g, op)
+            _, inc = g.incremental_boundary()
+            assert inc == g.recoverable_boundary(), (
+                f"divergence after {op}: incremental={inc} "
+                f"oracle={g.recoverable_boundary()}"
+            )
+
+    @settings(max_examples=80, deadline=None)
+    @given(ops=op_sequences(), data=st.data())
+    def test_incremental_equals_oracle_reordered_delivery_hypothesis(ops, data):
+        reports = [op for op in ops if op[0] == "report"]
+        jitter = [
+            data.draw(st.floats(min_value=0, max_value=6)) for _ in reports
+        ]
+        order = sorted(range(len(reports)), key=lambda i: i + jitter[i])
+        g = DependencyGraph()
+        for i in order:
+            _apply(g, reports[i])
+            _, inc = g.incremental_boundary()
+            assert inc == g.recoverable_boundary()
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=op_sequences(), data=st.data())
+    def test_incremental_equals_oracle_with_interleaved_pruning(ops, data):
+        """Pruning (what the coordinator does after every boundary advance)
+        must never perturb the equivalence."""
+        g = DependencyGraph()
+        for op in ops:
+            _apply(g, op)
+            _, inc = g.incremental_boundary()
+            assert inc == g.recoverable_boundary()
+            if data.draw(st.booleans()):
+                for so_id, b in inc.items():
+                    g.prune(so_id, b)
+                assert g.incremental_boundary()[1] == g.recoverable_boundary()
