@@ -2,9 +2,11 @@
 number of services, speculative vs synchronous-persistence baseline, plus a
 throughput-scaling sweep.
 
-Baseline simulates Temporal/Beldi/Boki-class systems by disabling
-speculation (WorkflowEngine(speculative=False)): the same number of
-synchronous persists current durable-execution engines pay (paper §6.1).
+Baseline simulates Temporal/Beldi/Boki-class systems by deploying every
+service on the synchronous DurableRuntime (``runtime="durable"``): the same
+number of synchronous persists current durable-execution engines pay
+(paper §6.1) — see ``benchmarks/bench_eval.py`` for the per-op latency /
+persistence-latency sweep version of this comparison.
 """
 from __future__ import annotations
 
@@ -21,7 +23,8 @@ GC = 0.010  # paper's 10 ms group commit
 
 
 def _setup(root: Path, n_services: int, speculative: bool):
-    cluster = LocalCluster(root, group_commit_interval=GC)
+    runtime = "dse" if speculative else "durable"
+    cluster = LocalCluster(root, group_commit_interval=GC, runtime=runtime)
     kvs = []
     for i in range(n_services):
         kv = cluster.add(
@@ -29,9 +32,7 @@ def _setup(root: Path, n_services: int, speculative: bool):
         )
         kv.stock("item", 10**9)
         kvs.append(kv)
-    wf = cluster.add(
-        "wf", lambda: WorkflowEngine(root / "wf", speculative=speculative)
-    )
+    wf = cluster.add("wf", lambda: WorkflowEngine(root / "wf"))
     return cluster, wf, kvs
 
 

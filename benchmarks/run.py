@@ -28,6 +28,7 @@ SUITES = [
     ("net", "bench_net", "beyond-paper: transport fabric + sharded coordinator"),
     ("sim", "bench_sim", "beyond-paper: deterministic simulation scheduler"),
     ("coordinator", "bench_coordinator", "beyond-paper: O(delta) coordinator hot path"),
+    ("eval", "bench_eval", "paper §6.1: DSE vs durable baseline across services/persistence"),
 ]
 
 

@@ -35,17 +35,22 @@ class LocalCluster:
         strict_commit_ordering: bool = False,
         persist_jitter: float = 0.0,
         barrier_poll_interval: float = 0.002,
+        runtime: str = "dse",
         clock: Clock = REAL_CLOCK,
     ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.clock = clock
         self.coordinator = self._make_coordinator()
+        # ``runtime`` selects the execution engine every member Connects
+        # with: "dse" (speculative) or "durable" (synchronous baseline);
+        # per-SO ``add(..., runtime=...)`` overrides win.
         self._defaults = dict(
             group_commit_interval=group_commit_interval,
             strict_commit_ordering=strict_commit_ordering,
             persist_jitter=persist_jitter,
             barrier_poll_interval=barrier_poll_interval,
+            runtime=runtime,
             clock=clock,
         )
         # Held across restart_coordinator's rebuild, which can acquire

@@ -120,6 +120,12 @@ class Coordinator:
         self._dindex = DecisionIndex()
         self._fsn = 0
         self._recovery_timeout = recovery_timeout
+        #: so_id -> set of (world, seq) report flushes already processed:
+        #: drops the duplicate when a transport retry of a timed-out report
+        #: RPC lands after the runtime's requeue path already resent it.
+        #: In-memory only — a restarted coordinator re-ingests (idempotent).
+        self._report_seen: Dict[str, Set[Tuple[int, int]]] = {}
+        self.dup_reports_dropped = 0
 
         # Replay the durable log: membership + decisions.
         for rec in self._log.replay():
@@ -340,9 +346,53 @@ class Coordinator:
             boundary_seq=bseq,
         )
 
-    def report(self, so_id: str, reports: Sequence[PersistReport]) -> None:
+    def _dedup_reports(
+        self, so_id: str, reports: Sequence[PersistReport]
+    ) -> List[PersistReport]:
+        """Drop reports whose (world, seq) this coordinator already processed
+        for ``so_id`` (call with self._lock held). seq=-1 (connect/fragment
+        resends rebuilt from disk) is never deduped — full resends must
+        always be ingestible."""
+        seen = self._report_seen.setdefault(so_id, set())
+        out: List[PersistReport] = []
+        for r in reports:
+            if r.seq >= 0:
+                key = (r.vertex.world, r.seq)
+                if key in seen:
+                    self.dup_reports_dropped += 1
+                    continue
+                seen.add(key)
+            out.append(r)
+        if len(seen) > 16384:
+            # memory bound: seqs are per-incarnation monotone, so within one
+            # world anything far below that world's max can only be a
+            # long-stale duplicate whose re-ingest is harmless (graph
+            # ingestion is idempotent). The floor is per-world: a restarted
+            # incarnation begins a new world at seq 0, and a global floor
+            # would erase its live window.
+            max_by_world: Dict[int, int] = {}
+            for w, s in seen:
+                if s > max_by_world.get(w, -1):
+                    max_by_world[w] = s
+            self._report_seen[so_id] = {
+                (w, s) for (w, s) in seen if s >= max_by_world[w] - 8192
+            }
+        return out
+
+    def report(self, so_id: str, reports: Sequence[PersistReport]) -> List[Vertex]:
+        """Ingest persisted-vertex reports; returns the vertices a rollback
+        decision has already invalidated (``_ingest`` drops them silently).
+        A successful return is therefore an *admission* ack for everything
+        not listed — the durable baseline blocks exposure on it, so it must
+        not mistake "delivered but dropped" for "inside the view" (an
+        invalidated-at-ingest vertex is above its owner's rollback target
+        and WILL be rolled back when the decision reaches the runtime)."""
         with self._lock:
-            self._ingest(reports)
+            self._ingest(self._dedup_reports(so_id, reports))
+            # evaluated over the full incoming batch (including seq-deduped
+            # duplicates): admission is a function of the decision set, so a
+            # retried flush gets the same verdict its lost ack carried.
+            return [r.vertex for r in reports if self._dindex.invalidates(r.vertex)]
 
     def receive_fragments(self, so_id: str, fragments: Sequence[PersistReport]) -> None:
         """Full fragment resend during coordinator recovery."""
@@ -385,6 +435,7 @@ class Coordinator:
                 "decisions": len(self._decisions),
                 "graph_vertices": sum(len(per) for per in snap.values()),
                 "awaiting": sorted(self._awaiting),
+                "dup_reports_dropped": self.dup_reports_dropped,
             }
 
     def close(self) -> None:

@@ -30,11 +30,16 @@ WIRE_MAGIC = 0xD5  # cannot start a JSON document (``{`` = 0x7B, ``[`` = 0x5B)
 
 K_HEADER = 1
 K_METADATA = 2
-K_REPORT = 3
-K_REPORTS = 4
+K_REPORT = 3  # legacy report body (no seq field) — read-only fallback
+K_REPORTS = 4  # legacy batch — read-only fallback
 K_DECISION = 5
 K_DECISIONS = 6
 K_BOUNDARY = 7
+#: report bodies gained a per-incarnation flush ``seq`` (PR 4); per the
+#: versioning rule (DESIGN.md §9) the layout change takes a NEW kind byte —
+#: writers emit v2, readers accept both so pre-seq blobs stay decodable.
+K_REPORT2 = 8
+K_REPORTS2 = 9
 
 
 def _w_uvarint(out: bytearray, n: int) -> None:
@@ -50,12 +55,34 @@ def _r_uvarint(buf: bytes, i: int) -> Tuple[int, int]:
     shift = 0
     n = 0
     while True:
+        if i >= len(buf):
+            raise ValueError(f"truncated blob: varint runs past end at byte {i}")
         b = buf[i]
         i += 1
         n |= (b & 0x7F) << shift
         if not b & 0x80:
             return n, i
         shift += 7
+        if shift > 70:
+            raise ValueError("malformed blob: varint wider than 10 bytes")
+
+
+def _r_bytes(buf: bytes, i: int, n: int) -> Tuple[bytes, int]:
+    """Bounds-checked slice: a truncated buffer must raise, never silently
+    yield a shortened string/user-bytes payload."""
+    if n < 0 or i + n > len(buf):
+        raise ValueError(
+            f"truncated blob: need {n} bytes at {i}, have {len(buf) - i}"
+        )
+    return buf[i : i + n], i + n
+
+
+def _str_at(strings: List[str], idx: int) -> str:
+    if idx >= len(strings):
+        raise ValueError(
+            f"malformed blob: string index {idx} out of table of {len(strings)}"
+        )
+    return strings[idx]
 
 
 def _w_svarint(out: bytearray, n: int) -> None:
@@ -96,8 +123,8 @@ class _StrTable:
         strings: List[str] = []
         for _ in range(n):
             ln, i = _r_uvarint(buf, i)
-            strings.append(buf[i : i + ln].decode("utf-8"))
-            i += ln
+            raw, i = _r_bytes(buf, i, ln)
+            strings.append(raw.decode("utf-8"))
         return strings, i
 
 
@@ -113,7 +140,7 @@ def _finish(prefix: bytearray, body: bytearray, tab: _StrTable) -> bytes:
 
 
 def _expect(raw: bytes, kind: int) -> Tuple[List[str], int]:
-    if raw[0] != WIRE_MAGIC or raw[1] != kind:
+    if len(raw) < 2 or raw[0] != WIRE_MAGIC or raw[1] != kind:
         raise ValueError(f"not a binary kind={kind} blob (starts {raw[:2]!r})")
     return _StrTable.read(raw, 2)
 
@@ -148,7 +175,7 @@ def _read_vertex(buf: bytes, i: int, strings: List[str]) -> Tuple[Vertex, int]:
     si, i = _r_uvarint(buf, i)
     world, i = _r_svarint(buf, i)
     version, i = _r_svarint(buf, i)
-    return Vertex(strings[si], world, version), i
+    return Vertex(_str_at(strings, si), world, version), i
 
 
 @dataclass(frozen=True)
@@ -298,19 +325,31 @@ class DecisionIndex:
 
 @dataclass
 class PersistReport:
-    """StateObject → coordinator report: vertex became durable with deps."""
+    """StateObject → coordinator report: vertex became durable with deps.
+
+    ``seq`` is a per-incarnation flush sequence number (-1 = unknown, e.g. a
+    Connect/fragment-resend report rebuilt from disk). The coordinator drops
+    a report whose ``(world, seq)`` it has already processed for this SO —
+    the requeue path can legitimately resend a report whose original
+    delivery succeeded after its RPC timed out (at-least-once wire).
+    """
 
     vertex: Vertex
     deps: Tuple[Vertex, ...]
+    seq: int = -1
 
     def to_json(self) -> dict:
-        return {"v": self.vertex.to_json(), "deps": [d.to_json() for d in self.deps]}
+        out = {"v": self.vertex.to_json(), "deps": [d.to_json() for d in self.deps]}
+        if self.seq >= 0:
+            out["seq"] = self.seq
+        return out
 
     @staticmethod
     def from_json(obj: dict) -> "PersistReport":
         return PersistReport(
             vertex=Vertex.from_json(obj["v"]),
             deps=tuple(Vertex.from_json(d) for d in obj["deps"]),
+            seq=int(obj.get("seq", -1)),
         )
 
 
@@ -319,37 +358,52 @@ class PersistReport:
 # --------------------------------------------------------------------------- #
 def _write_report_body(body: bytearray, tab: _StrTable, r: PersistReport) -> None:
     _write_vertex(body, tab, r.vertex)
+    _w_svarint(body, r.seq)
     _w_uvarint(body, len(r.deps))
     for d in r.deps:
         _write_vertex(body, tab, d)
 
 
-def _read_report_body(raw: bytes, i: int, strings: List[str]) -> Tuple[PersistReport, int]:
+def _read_report_body(
+    raw: bytes, i: int, strings: List[str], with_seq: bool
+) -> Tuple[PersistReport, int]:
     vertex, i = _read_vertex(raw, i, strings)
+    seq = -1
+    if with_seq:
+        seq, i = _r_svarint(raw, i)
     n, i = _r_uvarint(raw, i)
     deps = []
     for _ in range(n):
         d, i = _read_vertex(raw, i, strings)
         deps.append(d)
-    return PersistReport(vertex, tuple(deps)), i
+    return PersistReport(vertex, tuple(deps), seq=seq), i
+
+
+def _expect_either(raw: bytes, kind_v2: int, kind_legacy: int) -> Tuple[List[str], int, bool]:
+    """(strings, offset, with_seq) for a v2-or-legacy report blob."""
+    if len(raw) >= 2 and raw[0] == WIRE_MAGIC and raw[1] == kind_legacy:
+        strings, i = _StrTable.read(raw, 2)
+        return strings, i, False
+    strings, i = _expect(raw, kind_v2)
+    return strings, i, True
 
 
 def encode_report(r: PersistReport) -> bytes:
-    prefix, body, tab = _begin(K_REPORT)
+    prefix, body, tab = _begin(K_REPORT2)
     _write_report_body(body, tab, r)
     return _finish(prefix, body, tab)
 
 
 def decode_report(raw: bytes) -> PersistReport:
-    strings, i = _expect(raw, K_REPORT)
-    r, _ = _read_report_body(raw, i, strings)
+    strings, i, with_seq = _expect_either(raw, K_REPORT2, K_REPORT)
+    r, _ = _read_report_body(raw, i, strings, with_seq)
     return r
 
 
 def encode_reports(reports: Sequence[PersistReport]) -> bytes:
     """Batch encoding with ONE shared string table: a fragment resend of a
     whole SO history names each dep SO once, not once per vertex."""
-    prefix, body, tab = _begin(K_REPORTS)
+    prefix, body, tab = _begin(K_REPORTS2)
     _w_uvarint(body, len(reports))
     for r in reports:
         _write_report_body(body, tab, r)
@@ -357,11 +411,11 @@ def encode_reports(reports: Sequence[PersistReport]) -> bytes:
 
 
 def decode_reports(raw: bytes) -> List[PersistReport]:
-    strings, i = _expect(raw, K_REPORTS)
+    strings, i, with_seq = _expect_either(raw, K_REPORTS2, K_REPORTS)
     n, i = _r_uvarint(raw, i)
     out: List[PersistReport] = []
     for _ in range(n):
-        r, i = _read_report_body(raw, i, strings)
+        r, i = _read_report_body(raw, i, strings, with_seq)
         out.append(r)
     return out
 
@@ -383,8 +437,8 @@ def _read_decision_body(raw: bytes, i: int, strings: List[str]) -> Tuple[Rollbac
     for _ in range(n):
         si, i = _r_uvarint(raw, i)
         t, i = _r_svarint(raw, i)
-        targets[strings[si]] = t
-    return RollbackDecision(fsn=fsn, failed=strings[fi], targets=targets), i
+        targets[_str_at(strings, si)] = t
+    return RollbackDecision(fsn=fsn, failed=_str_at(strings, fi), targets=targets), i
 
 
 def encode_decision(d: RollbackDecision) -> bytes:
@@ -433,7 +487,7 @@ def decode_boundary(raw: bytes) -> Dict[str, int]:
     for _ in range(n):
         si, i = _r_uvarint(raw, i)
         w, i = _r_svarint(raw, i)
-        out[strings[si]] = w
+        out[_str_at(strings, si)] = w
     return out
 
 
@@ -488,4 +542,5 @@ def decode_metadata(raw: bytes) -> Tuple[int, int, Tuple[Vertex, ...], bytes]:
         d, i = _read_vertex(raw, i, strings)
         deps.append(d)
     ulen, i = _r_uvarint(raw, i)
-    return world, version, tuple(deps), bytes(raw[i : i + ulen])
+    user, i = _r_bytes(raw, i, ulen)
+    return world, version, tuple(deps), bytes(user)

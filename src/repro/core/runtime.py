@@ -44,6 +44,10 @@ class DSEConfig:
     coordinator: "Coordinator"
     group_commit_interval: float = 0.010  # seconds; paper default 10 ms
     strict_commit_ordering: bool = False
+    #: which runtime implementation ``StateObject.Connect`` builds: ``"dse"``
+    #: (speculative, this module) or ``"durable"`` (synchronous baseline,
+    #: :class:`repro.durable.DurableRuntime`). Same config, same protocol.
+    runtime: str = "dse"
     # Jitter persists across the fleet so thousands of nodes do not fsync in
     # lock-step (straggler/burst mitigation; beyond-paper, see DESIGN.md §6).
     persist_jitter: float = 0.0
@@ -59,6 +63,9 @@ class CrashedError(Exception):
 
 
 class DSERuntime:
+    #: introspection tag (``"durable"`` in the synchronous baseline subclass)
+    kind = "dse"
+
     def __init__(self, so: "StateObject", config: DSEConfig) -> None:
         self.so = so
         self.config = config
@@ -89,6 +96,14 @@ class DSERuntime:
         #: answering with this seq ship no boundary (nothing moved)
         self._boundary_seq = -1
         self._report_queue: List[PersistReport] = []
+        #: per-incarnation flush sequence stamped on each PersistReport so
+        #: the coordinator can drop duplicate deliveries (a transport retry
+        #: landing after the requeue path already resent the report).
+        self._report_seq = 0
+        #: world -> highest version whose report the coordinator has ACKED
+        #: (a successful ``report`` RPC return); the durable baseline blocks
+        #: exposure on this mark.
+        self._flushed_marks: Dict[int, int] = {}
         self._last_persist = self.clock.now()
         if config.persist_jitter:
             # crc32, not hash(): PYTHONHASHSEED-salted str hashing would make
@@ -283,6 +298,22 @@ class DSERuntime:
         return self._persist_now()
 
     def _persist_now(self, force_label: Optional[int] = None, synchronous: bool = False) -> int:
+        label, done, _world = self._persist_begin(force_label)
+        if synchronous:
+            done.wait()
+            try:
+                self._flush_reports()
+            except Exception:
+                pass  # connect-time flush: requeued, retried next Refresh
+        return label
+
+    def _persist_begin(self, force_label: Optional[int] = None):
+        """Snapshot + kick off the async Persist IO; returns ``(label,
+        done_event, world)`` — the event sets once the version is durable
+        and its report is queued; ``world`` is the epoch the snapshot (and
+        its report) actually carries, taken under the exclusive epoch so no
+        decision can interleave. The synchronous durable baseline builds
+        its per-action commit wait on this hook."""
         self._epoch.acquire_exclusive()
         try:
             with self._mu:
@@ -305,21 +336,19 @@ class DSERuntime:
                 with self._mu:
                     if label > self._committed:
                         self._committed = label
+                    seq = self._report_seq
+                    self._report_seq += 1
                     self._report_queue.append(
-                        PersistReport(Vertex(self.so_id, world, label), tuple(deps))
+                        PersistReport(
+                            Vertex(self.so_id, world, label), tuple(deps), seq=seq
+                        )
                     )
                 done.set()
 
             self.so.Persist(label, meta, _callback)
         finally:
             self._epoch.release_exclusive()
-        if synchronous:
-            done.wait()
-            try:
-                self._flush_reports()
-            except Exception:
-                pass  # connect-time flush: requeued, retried next Refresh
-        return label
+        return label, done, world
 
     # ------------------------------------------------------------------ #
     # refresh: background protocol driving (paper Table 2)               #
@@ -335,15 +364,42 @@ class DSERuntime:
             reports, self._report_queue = self._report_queue, []
         if not reports:
             return
+        # Dedup the batch by vertex: requeue interleavings can only ever
+        # leave one copy of a fragment in OUR queue, but belt-and-braces here
+        # keeps the wire batch canonical (and the coordinator additionally
+        # drops cross-batch duplicates by (so_id, world, seq) — a transport
+        # retry of a timed-out flush can land AFTER the requeued resend).
+        seen = set()
+        batch: List[PersistReport] = []
+        for r in reports:
+            key = (r.vertex.world, r.vertex.version)
+            if key in seen:
+                continue
+            seen.add(key)
+            batch.append(r)
         try:
-            self.coordinator.report(self.so_id, reports)
+            rejected = self.coordinator.report(self.so_id, batch)
         except Exception:
             # Transport failure (lossy / partitioned fabric): the coordinator
-            # never saw these fragments, so requeue them for the next Refresh
-            # round — silently dropping them would stall the boundary forever.
+            # may or may not have seen these fragments, so requeue them for
+            # the next Refresh round — silently dropping them could stall the
+            # boundary forever; the coordinator-side seq dedup makes the
+            # at-least-once resend single-count.
             with self._mu:
-                self._report_queue = reports + self._report_queue
+                self._report_queue = batch + self._report_queue
             raise
+        # Admission marks: a delivered report a decision already invalidated
+        # is NOT inside the coordinator's view (it will be rolled back), so
+        # it must not advance the durable baseline's exposure floor. An
+        # old/mocked coordinator returning None means "all admitted".
+        dropped = {(v.world, v.version) for v in (rejected or ())}
+        with self._mu:
+            for r in batch:
+                w = r.vertex.world
+                if (w, r.vertex.version) in dropped:
+                    continue
+                if r.vertex.version > self._flushed_marks.get(w, -1):
+                    self._flushed_marks[w] = r.vertex.version
 
     def _poll_coordinator(self) -> None:
         with self._mu:
@@ -494,6 +550,7 @@ class DSERuntime:
         with self._mu:
             return {
                 "so_id": self.so_id,
+                "runtime": self.kind,
                 "world": self.world,
                 "v_cur": self._v_cur,
                 "committed": self._committed,

@@ -55,7 +55,15 @@ class StateObject(abc.ABC):
 
         if self._runtime is not None:
             raise RuntimeError("Connect must be invoked exactly once")
-        self._runtime = DSERuntime(self, config)
+        kind = getattr(config, "runtime", "dse")
+        if kind == "durable":
+            # lazy import: repro.durable depends on repro.core, not vice versa
+            from ..durable.runtime import DurableRuntime as runtime_cls
+        elif kind == "dse":
+            runtime_cls = DSERuntime
+        else:
+            raise ValueError(f"unknown runtime {kind!r} (expected 'dse' or 'durable')")
+        self._runtime = runtime_cls(self, config)
         # stores exist before the clock does (service constructors run
         # first): bind every VersionStore to the runtime's injected clock
         for attr in vars(self).values():

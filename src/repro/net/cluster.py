@@ -15,6 +15,14 @@ With ``n_shards >= 1``, the coordinator is a
 :class:`~repro.net.sharded.ShardedCoordinator`: each shard is a transport
 endpoint (``coord/<i>``), and every StateObject's runtime talks to its home
 shard through a :class:`RemoteCoordinator` proxy.
+
+Runtime choice rides the same path as every other deployment knob: pass
+``runtime="durable"`` (cluster-wide, via LocalCluster) or per-SO
+``add(..., runtime="durable")`` and the member runs the synchronous
+durable-execution baseline (:class:`~repro.durable.DurableRuntime`) over
+exactly the same transport, proxies, and shard endpoints — its per-action
+commit blocks on the report RPC through :class:`RemoteCoordinator`, so the
+baseline pays real fabric round-trips where DSE pays none.
 """
 from __future__ import annotations
 
@@ -47,10 +55,11 @@ class RemoteCoordinator:
         # control plane: direct (see module docstring)
         return self._cluster.coordinator.connect(so_id, fragments)
 
-    def report(self, so_id: str, reports) -> None:
+    def report(self, so_id: str, reports):
         # Batch-encoded with one shared so_id table (DESIGN.md §9) — a
         # fragment resend names each dep SO once, not once per vertex.
-        self._cluster.transport.call(
+        # Returns the coordinator's rejected-vertex list (admission ack).
+        return self._cluster.transport.call(
             self._src(),
             self._cluster.coordinator_endpoint(so_id),
             "report",

@@ -341,8 +341,10 @@ class ShardedCoordinator:
     def connect(self, so_id: str, fragments: Sequence[PersistReport]) -> ConnectResponse:
         return self.shard_for(so_id).connect(so_id, fragments)
 
-    def report(self, so_id: str, reports: Sequence[PersistReport]) -> None:
-        self.shard_for(so_id).report(so_id, reports)
+    def report(self, so_id: str, reports: Sequence[PersistReport]):
+        # pass the admission ack (rejected-vertex list) through: a durable
+        # runtime on this handle must not mistake "dropped" for "admitted"
+        return self.shard_for(so_id).report(so_id, reports)
 
     def receive_fragments(self, so_id: str, fragments: Sequence[PersistReport]) -> None:
         self.shard_for(so_id).receive_fragments(so_id, fragments)

@@ -87,15 +87,25 @@ class SpeculativeKVStore(StateObject):
         return self.EndAction()
 
     def try_reserve(self, item: str, owner: str, header: Optional[Header] = None):
-        """Atomically decrement inventory; returns (ok, header) or None."""
+        """Atomically decrement inventory; returns (ok, header) or None.
+
+        Idempotent per (item, owner): a retried step whose first application
+        survived (driver retry after a lost reply / workflow resume) must not
+        double-decrement — the standard idempotency-key requirement of
+        durable-execution activities (Temporal/Beldi), and what keeps the
+        DSE-vs-durable differential oracle exact under crash faults.
+        """
         if not self.StartAction(header):
             return None
         with self._mu:
-            left = int(self._map.get(f"inv:{item}", "0"))
-            ok = left > 0
-            if ok:
-                self._map[f"inv:{item}"] = str(left - 1)
-                self._map[f"res:{item}:{owner}"] = "1"
+            if self._map.get(f"res:{item}:{owner}") == "1":
+                ok = True  # already applied: ack again without re-decrementing
+            else:
+                left = int(self._map.get(f"inv:{item}", "0"))
+                ok = left > 0
+                if ok:
+                    self._map[f"inv:{item}"] = str(left - 1)
+                    self._map[f"res:{item}:{owner}"] = "1"
         return ok, self.EndAction()
 
     def release(self, item: str, owner: str, header: Optional[Header] = None):

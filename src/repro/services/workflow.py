@@ -8,10 +8,12 @@ index rolls back together with everything else, so after recovery the
 workflow resumes "from exactly where it is supposed to" — re-invoking
 ``run_workflow`` with the same id continues from the surviving step index.
 
-``speculative=False`` reproduces the current-generation durable-execution
-baseline (Temporal/Beldi/Boki-style): a synchronous durability wait after
-*every* transition, which is exactly the per-step persistence the paper's
-Figure 9 baseline pays.
+The current-generation durable-execution baseline (Temporal/Beldi/
+Boki-style per-transition synchronous persistence, the paper's Figure-9
+baseline) is no longer a bespoke flag here: deploy the engine with
+``runtime="durable"`` (:class:`~repro.durable.DurableRuntime`) and every
+``Detach``/``EndAction`` below becomes a synchronous durability wait — the
+orchestration code is identical on both runtimes.
 """
 from __future__ import annotations
 
@@ -30,10 +32,9 @@ Step = Callable[[Header], Optional[Tuple[object, Header]]]
 
 
 class WorkflowEngine(StateObject):
-    def __init__(self, root: Path, speculative: bool = True, io_ms: float = 0.0) -> None:
+    def __init__(self, root: Path, io_ms: float = 0.0) -> None:
         super().__init__()
         self.store = VersionStore(root, simulate_io_ms=io_ms)
-        self.speculative = speculative
         self._wfs: Dict[str, dict] = {}
         self._mu = threading.Lock()
 
@@ -108,11 +109,6 @@ class WorkflowEngine(StateObject):
                 wf = self._wfs[wf_id]
                 wf["results"].append(result)
                 wf["step"] = i + 1
-            if not self.speculative:
-                # Baseline durable execution: persist intent + outcome
-                # synchronously before the next step (paper §2.1).
-                if not self.wait_durable(timeout=30.0):
-                    return None
             t = self.Detach()
 
         if not self.Merge(t):

@@ -57,8 +57,13 @@ class SimCluster:
         retry_timeout: float = 0.01,
         call_timeout: float = 30.0,
         max_virtual_time: float = 600.0,
+        runtime: str = "dse",
         **cluster_kw,
     ) -> None:
+        #: ``runtime`` picks the execution engine every service Connects
+        #: with — "dse" (speculative) or "durable" (synchronous baseline,
+        #: repro.durable). The differential oracle (sim/differential.py)
+        #: replays one scenario under both and diffs committed results.
         self.root = Path(root)
         self.seed = seed
         self.n_shards = n_shards
@@ -72,9 +77,11 @@ class SimCluster:
             retry_timeout=retry_timeout,
             call_timeout=call_timeout,
         )
+        self.runtime = runtime
         self._cluster_kw = dict(
             refresh_interval=refresh_interval,
             group_commit_interval=group_commit_interval,
+            runtime=runtime,
             **cluster_kw,
         )
         self.transport: Optional[SimTransport] = None

@@ -20,6 +20,14 @@ Scenarios (registry ``SCENARIOS``):
                   workflows complete with exactly-once step effects.
 * ``crash_commit`` / ``partition_merge`` / ``dup_fragments`` — the pinned
   regression scenarios (explicit fault plans at nasty protocol moments).
+* ``broker``    — produce→consume→ack pipeline over the speculative event
+                  broker under benign faults; exactly-once in-order delivery.
+* ``two_phase_commit`` — transactional client over TwoPC under crashes +
+                  partitions; acked commits are durable + atomic everywhere.
+* ``differential_kv`` / ``differential_workflow`` — the differential oracle
+  (``sim/differential.py``): one seeded history + fault plan replayed on
+  both the DSE and the synchronous durable runtime; committed results must
+  match op-for-op (durable = oracle).
 """
 from __future__ import annotations
 
@@ -36,6 +44,11 @@ from typing import Callable, Dict, List, Optional
 
 from ..net import LinkSpec
 from .cluster import RecordingClient, SimCluster, SimResult
+from .differential import (
+    default_differential_plan,
+    differential_kv_scenario,
+    differential_workflow_scenario,
+)
 from .faults import FaultPlan
 from .invariants import (
     CounterModel,
@@ -66,6 +79,20 @@ def default_plan(scenario: str, seed: int) -> FaultPlan:
         return FaultPlan.random(
             seed, so_ids=["kv", "wf"], horizon=0.8, n_shards=2, allow_crash=False
         )
+    if scenario == "broker":
+        return FaultPlan.random(
+            seed, so_ids=["broker"], horizon=0.8, n_shards=2, allow_crash=False
+        )
+    if scenario == "two_phase_commit":
+        return FaultPlan.random(
+            seed,
+            so_ids=["coord2pc", "p0", "p1"],
+            horizon=0.8,
+            n_shards=2,
+            allow_crash=True,
+        )
+    if scenario in ("differential_kv", "differential_workflow"):
+        return default_differential_plan(seed)
     if scenario == "crash_commit":
         return FaultPlan().crash(0.055, "prod")  # mid group-commit interval
     if scenario == "partition_merge":
@@ -501,6 +528,199 @@ def dup_fragments_scenario(seed: int, root: Path, plan: Optional[FaultPlan] = No
     return result
 
 
+# --------------------------------------------------------------------------- #
+# broker: produce -> consume -> ack, exactly-once in order                      #
+# --------------------------------------------------------------------------- #
+def broker_scenario(seed: int, root: Path, plan: Optional[FaultPlan] = None) -> SimResult:
+    """DARQ-style pipeline over the speculative event broker under benign
+    fabric faults (loss / dup / delay / partitions / shard restarts): every
+    produced event is consumed exactly once, in order, and the ack offset
+    only advances past consumed prefixes."""
+    from ..services.broker import EventBroker
+
+    horizon = 0.8  # matches default_plan("broker", ...)
+    if plan is None:
+        plan = default_plan("broker", seed)
+    sim = SimCluster(
+        root,
+        seed=seed,
+        n_shards=2,
+        refresh_interval=0.005,
+        group_commit_interval=0.01,
+        call_timeout=20.0,
+    )
+    rng = random.Random(seed ^ 0xB40CE4)
+    n_events = 12
+    pauses = [rng.uniform(0.0, 0.05) for _ in range(n_events)]
+
+    def scenario(sim: SimCluster):
+        sim.add("broker", lambda: EventBroker(sim.root / "so_broker", topics=["t"]))
+        # offset -> data: the broker redelivers unacked events by contract
+        # (at-least-once consume + ack-advances-offset), so the consumer is
+        # idempotent by offset — conflicting data for one offset is the bug.
+        consumed: Dict[int, bytes] = {}
+        conflicts: List[str] = []
+
+        def producer() -> None:
+            for i, pause in enumerate(pauses):
+                try:
+                    sim.send(None, "broker", "produce", "t", [f"e{i}".encode()], None)
+                except TimeoutError:
+                    pass  # unreachable in practice: call_timeout outlives
+                    # every partition window and the fabric retries
+                sim.sleep(pause)
+
+        def consumer() -> None:
+            deadline = sim.clock.now() + 30.0
+            while len(consumed) < n_events and sim.clock.now() < deadline:
+                try:
+                    out = sim.send(None, "broker", "consume", "g", "t", 4, None)
+                    if out is not None:
+                        events, h = out
+                        for off, data in events:
+                            if consumed.setdefault(off, data) != data:
+                                conflicts.append(f"offset {off} redelivered different data")
+                        if events:
+                            sim.send(None, "broker", "ack", "g", "t", events[-1][0], h)
+                except TimeoutError:
+                    pass
+                sim.sleep(0.02)
+
+        tasks = [
+            sim.spawn(producer, name="producer"),
+            sim.spawn(consumer, name="consumer"),
+        ]
+        for t in tasks:
+            t.join()
+        sim.sleep(max(0.0, horizon - sim.clock.now()) + 0.05)
+        sim.settle(lambda: sim.boundary() is not None, timeout=20.0)
+        broker = sim.get("broker")
+        return {
+            "consumed": [consumed[k] for k in sorted(consumed)],
+            "conflicts": conflicts,
+            "tail": broker.topic_tail("t"),
+            "skipped": broker.entries_skipped(),
+        }
+
+    result = sim.run(scenario, plan=plan)
+    v = result.value
+    errors: List[str] = list(v["conflicts"])
+    expected = [f"e{i}".encode() for i in range(n_events)]
+    if v["consumed"] != expected:
+        errors.append(
+            f"exactly-once in-order consumption violated: got {v['consumed']!r}"
+        )
+    if v["tail"] != n_events:
+        errors.append(f"topic tail {v['tail']} != {n_events} produced (dup/lost produce)")
+    errors += result.watermarks.check()
+    errors += check_shard_logs(root / "cluster" / "coord")
+    _raise_if(errors, seed, "broker")
+    return result
+
+
+# --------------------------------------------------------------------------- #
+# two_phase_commit: atomic commit under crashes + partitions                    #
+# --------------------------------------------------------------------------- #
+def two_phase_commit_scenario(
+    seed: int, root: Path, plan: Optional[FaultPlan] = None
+) -> SimResult:
+    """Transactional client over speculative 2PC while participants crash
+    and the fabric partitions: every client-acked commit must be durable in
+    every participant's log after recovery, and no transaction may commit
+    in one participant and abort in another."""
+    from ..services.two_phase_commit import TwoPCClient, TwoPCCoordinator, TwoPCParticipant
+
+    horizon = 0.8  # matches default_plan("two_phase_commit", ...)
+    if plan is None:
+        plan = default_plan("two_phase_commit", seed)
+    sim = SimCluster(
+        root,
+        seed=seed,
+        n_shards=2,
+        refresh_interval=0.005,
+        group_commit_interval=0.01,
+        call_timeout=20.0,
+    )
+    rng = random.Random(seed ^ 0x2FC0)
+    n_txns = 5
+    pauses = [rng.uniform(0.0, 0.06) for _ in range(n_txns)]
+
+    def scenario(sim: SimCluster):
+        from ..core.runtime import CrashedError
+
+        sim.add("coord2pc", lambda: TwoPCCoordinator(sim.root / "so_c2pc"))
+        for i in range(2):
+            sim.add(f"p{i}", (lambda i=i: TwoPCParticipant(sim.root / f"so_p{i}")))
+        from ..core.sthread import RolledBackError
+
+        acked: List[str] = []
+        for i, pause in enumerate(pauses):
+            # fresh txn id per ATTEMPT: a retry after a rollback mid-protocol
+            # must not reuse an id that may already carry a (lost-then-
+            # durable) decide record — real clients retry with new ids too.
+            for attempt in range(60):
+                txn = f"t{i}a{attempt}"
+                try:
+                    # re-fetch every attempt — crash faults replace incarnations
+                    client = TwoPCClient(
+                        sim.get("coord2pc"), [sim.get("p0"), sim.get("p1")]
+                    )
+                    out = client.run(txn)
+                except (TimeoutError, CrashedError, RolledBackError):
+                    out = None
+                if out:  # acked commit; False (abort) retries with a new id
+                    acked.append(txn)
+                    break
+                sim.sleep(0.02)
+            sim.sleep(pause)
+        sim.sleep(max(0.0, horizon - sim.clock.now()) + 0.05)
+        sim.settle(
+            lambda: sim.boundary() is not None
+            and len(
+                {sim.get(s).runtime.world for s in ("coord2pc", "p0", "p1")}
+            )
+            == 1,
+            timeout=30.0,
+        )
+        logs = {}
+        for s in ("p0", "p1"):
+            entries = [e.decode() for _, e in sim.get(s).core.scan(0)]
+            logs[s] = entries
+        return {"acked": acked, "logs": logs}
+
+    result = sim.run(scenario, plan=plan)
+    v = result.value
+    errors: List[str] = []
+    for s, entries in v["logs"].items():
+        decided = {}
+        for e in entries:
+            parts = e.split(":")
+            if parts[0] == "decide":
+                txn, verdict = parts[1], parts[2]
+                if decided.get(txn, verdict) != verdict:
+                    errors.append(f"{s}: {txn} both committed and aborted: {entries}")
+                decided[txn] = verdict
+        for txn in v["acked"]:
+            if decided.get(txn) != "c":
+                errors.append(
+                    f"client-acked commit {txn} not durable in {s} (decided={decided})"
+                )
+    # atomicity across participants: no txn decided differently in p0 vs p1
+    def _decisions_of(entries):
+        return {
+            e.split(":")[1]: e.split(":")[2] for e in entries if e.startswith("decide:")
+        }
+
+    d0, d1 = _decisions_of(v["logs"]["p0"]), _decisions_of(v["logs"]["p1"])
+    for txn in set(d0) & set(d1):
+        if d0[txn] != d1[txn]:
+            errors.append(f"atomicity violated for {txn}: p0={d0[txn]} p1={d1[txn]}")
+    errors += result.watermarks.check()
+    errors += check_shard_logs(root / "cluster" / "coord")
+    _raise_if(errors, seed, "two_phase_commit")
+    return result
+
+
 SCENARIOS: Dict[str, Scenario] = {
     "kv": kv_scenario,
     "counter": counter_scenario,
@@ -508,6 +728,10 @@ SCENARIOS: Dict[str, Scenario] = {
     "crash_commit": crash_commit_scenario,
     "partition_merge": partition_merge_scenario,
     "dup_fragments": dup_fragments_scenario,
+    "broker": broker_scenario,
+    "two_phase_commit": two_phase_commit_scenario,
+    "differential_kv": differential_kv_scenario,
+    "differential_workflow": differential_workflow_scenario,
 }
 
 

@@ -196,3 +196,169 @@ def test_binary_smaller_than_json():
     assert len(encode_metadata(1, 9, deps, user)) < len(
         encode_metadata_json(1, 9, deps, user)
     )
+
+
+# --------------------------------------------------------------------------- #
+# truncated-buffer rejection + adversarial inputs (PR-4)                       #
+# --------------------------------------------------------------------------- #
+def _sample_blobs():
+    """(decoder, blob) per kind, with non-ASCII ids, dense and empty dep
+    sets, large varints (> 2^32 versions), and raw user bytes."""
+    v = Vertex("注文サービス-ü🦜", 3, 2**40 + 17)
+    dense = tuple(Vertex(f"s{i}", i, 2**33 + i) for i in range(6))
+    return [
+        (Header.decode, Header.of(v, *dense).encode()),
+        (Header.decode, Header(frozenset()).encode()),
+        (decode_metadata, encode_metadata(2**20, 2**40, list(dense), user=bytes(range(48)))),
+        (decode_report, encode_report(PersistReport(v, dense, seq=2**34))),
+        (
+            decode_reports,
+            encode_reports([PersistReport(v, (), seq=0), PersistReport(v, dense, seq=1)]),
+        ),
+        (
+            decode_decision,
+            encode_decision(
+                RollbackDecision(fsn=2**20, failed="注文", targets={"a": -1, "b": 2**40})
+            ),
+        ),
+        (
+            decode_decisions,
+            encode_decisions(
+                [RollbackDecision(fsn=1, failed="x", targets={}) for _ in range(3)]
+            ),
+        ),
+        (decode_boundary, encode_boundary({"注文": -1, "s1": 2**40})),
+    ]
+
+
+def _decoders():
+    return [
+        Header.decode,
+        decode_metadata,
+        decode_report,
+        decode_reports,
+        decode_decision,
+        decode_decisions,
+        decode_boundary,
+    ]
+
+
+def test_truncated_buffers_rejected_exhaustively():
+    """EVERY strict prefix of every blob kind must raise ValueError — never
+    silently decode to a shortened string/dep-set/user-bytes payload (the
+    pre-PR-4 readers sliced past the end and returned corrupt values)."""
+    for decode, raw in _sample_blobs():
+        assert decode(raw) is not None  # full blob decodes
+        for cut in range(len(raw)):
+            try:
+                decode(raw[:cut])
+            except ValueError:
+                continue
+            except IndexError as e:  # pragma: no cover - would be a regression
+                raise AssertionError(
+                    f"truncation at {cut}/{len(raw)} leaked IndexError"
+                ) from e
+            raise AssertionError(
+                f"truncated blob (cut {cut}/{len(raw)}, kind {raw[1]}) "
+                "decoded without error"
+            )
+
+
+def test_wrong_kind_and_garbage_rejected():
+    import pytest
+
+    blob = encode_boundary({"a": 1})
+    for wrong in _decoders():
+        if wrong is decode_boundary:
+            continue
+        with pytest.raises(ValueError):
+            wrong(blob)
+    with pytest.raises(ValueError):
+        decode_report(b"")
+    with pytest.raises(ValueError):
+        decode_report(bytes([0xD5]))
+    with pytest.raises(ValueError):
+        # malformed: unterminated varint (all continuation bits)
+        decode_boundary(bytes([0xD5, 7]) + b"\xff" * 16)
+
+
+def _legacy_report_blob(reports, batch: bool) -> bytes:
+    """Hand-rolled pre-seq (kind 3/4) report layout: vertex, dep count,
+    deps — no seq field. Pins the on-wire bytes an old peer produces."""
+    from repro.core.ids import K_REPORT, K_REPORTS, _begin, _finish, _write_vertex, _w_uvarint
+
+    prefix, body, tab = _begin(K_REPORTS if batch else K_REPORT)
+    if batch:
+        _w_uvarint(body, len(reports))
+    for r in reports:
+        _write_vertex(body, tab, r.vertex)
+        _w_uvarint(body, len(r.deps))
+        for d in r.deps:
+            _write_vertex(body, tab, d)
+    return _finish(prefix, body, tab)
+
+
+def test_legacy_report_kind_fallback():
+    """The seq field took a NEW kind byte (DESIGN.md §9 versioning rule):
+    writers emit kind 8/9, but kind-3/4 blobs from pre-seq builds decode
+    forever, as seq=-1."""
+    from repro.core.ids import K_REPORT2, K_REPORTS2
+
+    v = Vertex("注文-svc", 1, 7)
+    deps = (Vertex("b", 0, 3),)
+    r = PersistReport(v, deps)  # seq=-1
+    assert encode_report(r)[1] == K_REPORT2
+    assert encode_reports([r])[1] == K_REPORTS2
+    assert decode_report(_legacy_report_blob([r], batch=False)) == r
+    assert decode_reports(_legacy_report_blob([r, r], batch=True)) == [r, r]
+
+
+def test_legacy_report_truncation_rejected():
+    v = Vertex("svc", 0, 1)
+    raw = _legacy_report_blob([PersistReport(v, (v,))], batch=False)
+    import pytest
+
+    for cut in range(len(raw)):
+        with pytest.raises(ValueError):
+            decode_report(raw[:cut])
+
+
+def test_report_seq_round_trip_and_json_interop():
+    """The PR-4 ``seq`` field survives binary and JSON paths in both
+    directions, and legacy JSON without a seq decodes as seq=-1."""
+    r = PersistReport(Vertex("ü", 1, 2), (Vertex("b", 0, 1),), seq=7)
+    assert decode_report(encode_report(r)) == r
+    assert decode_reports(encode_reports([r, r])) == [r, r]
+    assert PersistReport.from_json(r.to_json()) == r
+    legacy = {"v": ["ü", 1, 2], "deps": [["b", 0, 1]]}  # pre-seq JSON shape
+    assert PersistReport.from_json(legacy).seq == -1
+    no_seq = PersistReport(Vertex("a", 0, 0), ())
+    assert "seq" not in no_seq.to_json()
+    assert PersistReport.from_json(no_seq.to_json()) == no_seq
+
+
+def test_json_interop_both_directions():
+    """Legacy-JSON interop is bidirectional for every type with a JSON
+    form: obj -> to_json -> from_json -> obj, and json.dumps round-trips
+    (wire-safe for the JSONL coordinator logs)."""
+    d = RollbackDecision(fsn=9, failed="注文", targets={"a": -1, "b": 2**40})
+    assert RollbackDecision.from_json(json.loads(json.dumps(d.to_json()))) == d
+    v = Vertex("注文", 1, 2**40)
+    assert Vertex.from_json(json.loads(json.dumps(v.to_json()))) == v
+    r = PersistReport(v, (v,), seq=3)
+    assert PersistReport.from_json(json.loads(json.dumps(r.to_json()))) == r
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=150, deadline=None)
+    @given(r=REPORTS, seq=st.integers(min_value=-1, max_value=2**40), data=st.data())
+    def test_truncation_rejection_hypothesis(r, seq, data):
+        """Random report blobs (non-ASCII ids, empty/dense dep sets, large
+        varints) truncated at a random point must raise ValueError."""
+        import pytest
+
+        raw = encode_report(PersistReport(r.vertex, r.deps, seq=seq))
+        cut = data.draw(st.integers(min_value=0, max_value=len(raw) - 1))
+        with pytest.raises(ValueError):
+            decode_report(raw[:cut])

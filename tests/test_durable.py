@@ -1,0 +1,188 @@
+"""DurableRuntime (repro.durable) — the synchronous durable-execution
+baseline: per-action synchronous persistence + report-ack, crash-loss-free
+acks, protocol interop with speculative peers, and the runtime= threading
+through LocalCluster / NetCluster / SimCluster.
+"""
+from __future__ import annotations
+
+import pytest
+
+from conftest import settle
+from repro.core import LocalCluster
+from repro.core.runtime import DSEConfig
+from repro.services.counter import CounterStateObject
+from repro.services.kv_store import SpeculativeKVStore
+from repro.services.workflow import WorkflowEngine
+
+
+class TestDurableSemantics:
+    def test_every_action_synchronously_durable(self, tmp_path):
+        with LocalCluster(tmp_path / "c", runtime="durable") as c:
+            ctr = c.add("ctr", lambda: CounterStateObject(tmp_path / "so"))
+            assert ctr.runtime.kind == "durable"
+            for i in range(1, 4):
+                v, h = ctr.increment(None)
+                st = ctr.runtime.stats()
+                # the ack is already durable — no group-commit wait involved
+                assert st["committed"] >= i, st
+                # and the emitted header references a durable vertex
+                (dep,) = h.deps
+                assert dep.version <= st["committed"]
+
+    def test_crash_never_loses_acked_state(self, tmp_path):
+        """THE oracle property: under DSE a never-persisted ack rolls back;
+        under the durable baseline every ack survives any crash."""
+        with LocalCluster(tmp_path / "c", runtime="durable") as c:
+            ctr = c.add("ctr", lambda: CounterStateObject(tmp_path / "so"))
+            acks = [ctr.increment(None)[0] for _ in range(5)]
+            c.kill("ctr")
+            c.refresh_all()
+            assert c.get("ctr").value == acks[-1] == 5
+
+    def test_speculative_peer_rolls_back_durable_does_not(self, tmp_path):
+        """Mixed deployment: a durable producer's acks survive while the
+        speculative consumer that consumed them recovers per protocol."""
+        with LocalCluster(tmp_path / "c", refresh_interval=None, group_commit_interval=99) as c:
+            prod = c.add(
+                "prod", lambda: CounterStateObject(tmp_path / "p"), runtime="durable"
+            )
+            cons = c.add("cons", lambda: CounterStateObject(tmp_path / "q"))  # dse
+            assert (prod.runtime.kind, cons.runtime.kind) == ("durable", "dse")
+            for _ in range(3):
+                v, h = prod.increment(None)
+                cons.increment(h)
+            assert cons.value == 3
+            c.kill("cons")
+            c.refresh_all()
+            # consumer lost its speculative (never-persisted) increments;
+            # the durable producer lost nothing and keeps serving
+            assert c.get("cons").value == 0
+            assert prod.increment(None)[0] == 4
+
+    def test_workflow_on_durable_runtime(self, tmp_path):
+        with LocalCluster(tmp_path / "c", runtime="durable") as c:
+            kv = c.add("kv", lambda: SpeculativeKVStore(tmp_path / "kv"))
+            kv.stock("item", 10)
+            wf = c.add("wf", lambda: WorkflowEngine(tmp_path / "wf"))
+            steps = [
+                (lambda h, s=s: kv.try_reserve("item", f"w:{s}", h)) for s in range(3)
+            ]
+            out = wf.run_workflow("w", steps)
+            assert out is not None and out[0] == [True, True, True]
+            # crash both: everything acked must survive
+            c.kill("wf")
+            c.kill("kv")
+            c.refresh_all()
+            assert c.get("wf").workflow_state("w")["status"] == "done"
+            v, _ = c.get("kv").get("inv:item")
+            assert v == "7"
+
+    def test_try_reserve_idempotent_by_owner(self, tmp_path):
+        """Retried activity contract: re-applying a surviving reservation
+        acks again without double-decrementing."""
+        with LocalCluster(tmp_path / "c") as c:
+            kv = c.add("kv", lambda: SpeculativeKVStore(tmp_path / "kv"))
+            kv.stock("item", 2)
+            assert kv.try_reserve("item", "w:0")[0] is True
+            assert kv.try_reserve("item", "w:0")[0] is True  # retry, same owner
+            v, _ = kv.get("inv:item")
+            assert v == "1"
+
+    def test_rejected_report_does_not_ack(self, tmp_path):
+        """Ack-vs-ingest gap (code-review regression): a report delivered
+        AFTER a decision already invalidated its vertex is silently dropped
+        by coordinator ingest — it must NOT count as an admission ack. The
+        durable commit fails the request (RolledBackError) instead of
+        exposing state that the pending decision will roll back."""
+        from repro.core.sthread import RolledBackError
+
+        with LocalCluster(
+            tmp_path / "c", refresh_interval=None, group_commit_interval=99
+        ) as c:
+            a = c.add(
+                "a", lambda: CounterStateObject(tmp_path / "a"), runtime="durable"
+            )
+            c.add("b", lambda: CounterStateObject(tmp_path / "b"))
+            assert a.increment(None)[0] == 1  # committed + admitted: label 1
+            real = a.runtime.coordinator
+
+            class DecideThenDeliver:
+                """Transport model of the race: b's failure decision is
+                computed while a's next report is still crossing the
+                fabric, so the report lands already-invalidated."""
+
+                armed = True
+
+                def report(self, so_id, reports):
+                    if self.armed:
+                        self.armed = False
+                        c.kill("b")  # decision targets a at its ingested v1
+                    return real.report(so_id, reports)
+
+                def __getattr__(self, name):
+                    return getattr(real, name)
+
+            a.runtime.coordinator = DecideThenDeliver()
+            with pytest.raises(RolledBackError):
+                a.increment(None)  # label 2: delivered but rejected
+            # the rejection was counted server-side, and a recovers to the
+            # consistent prefix and keeps serving
+            assert a.runtime.world == 1
+            assert a.value == 1
+            assert a.increment(None)[0] == 2
+
+    def test_report_returns_rejected_vertices(self, tmp_path):
+        """Coordinator.report's return value is the admission ack: vertices
+        an existing decision invalidates come back, admitted ones do not."""
+        from repro.core.ids import PersistReport, RollbackDecision, Vertex
+
+        with LocalCluster(tmp_path / "c") as c:
+            coord = c.coordinator
+            coord._note_decision(RollbackDecision(fsn=1, failed="x", targets={"x": 1}))
+            ok = PersistReport(Vertex("x", 0, 1), (), seq=0)
+            dead = PersistReport(Vertex("x", 0, 5), (), seq=1)
+            assert coord.report("x", [ok, dead]) == [dead.vertex]
+            assert coord.report("x", [ok]) == []  # seq-deduped, still admitted
+
+    def test_unknown_runtime_rejected(self, tmp_path):
+        so = CounterStateObject(tmp_path / "so")
+        with LocalCluster(tmp_path / "c") as c:
+            cfg = DSEConfig(so_id="x", coordinator=c.coordinator, runtime="nope")
+            with pytest.raises(ValueError, match="unknown runtime"):
+                so.Connect(cfg)
+
+
+class TestDurableOverFabric:
+    def test_durable_commit_pays_transport_roundtrip(self, tmp_path):
+        """Over NetCluster the durable commit blocks on the report RPC
+        through the fabric; acks still survive a crash."""
+        from repro.net import NetCluster
+
+        with NetCluster(tmp_path / "c", n_shards=2, runtime="durable") as c:
+            ctr = c.add("ctr", lambda: CounterStateObject(tmp_path / "so"))
+            for _ in range(3):
+                c.send(None, "ctr", "increment", None)
+            sent_before = c.transport.stats()["sent"]
+            assert sent_before > 0  # report traffic crossed the fabric
+            c.kill("ctr")
+            assert settle(
+                lambda: c.get("ctr").value == 3, cluster=c, timeout=10.0
+            ), c.get("ctr").value
+
+    def test_sim_cluster_threads_runtime(self, tmp_path):
+        from repro.sim import SimCluster
+
+        sim = SimCluster(tmp_path / "s", seed=3, n_shards=2, runtime="durable")
+
+        def scenario(sim):
+            sim.add("ctr", lambda: CounterStateObject(sim.root / "so"))
+            out = sim.send(None, "ctr", "increment", None)
+            assert out is not None
+            return {
+                "kind": sim.get("ctr").runtime.kind,
+                "committed": sim.get("ctr").runtime.stats()["committed"],
+            }
+
+        res = sim.run(scenario)
+        assert res.value["kind"] == "durable"
+        assert res.value["committed"] >= 1

@@ -235,3 +235,125 @@ class TestBatchedDelivery:
         assert t.call("cli", "svc", "x") == "old"
         t.register("svc", lambda method, *a, **k: "new")  # restarted incarnation
         assert t.call("cli", "svc", "x") == "new"
+
+
+class TestReportRequeueDedup:
+    """PR-4 regression: when a report RPC raises (timeout) AFTER the
+    coordinator actually processed the delivery — lost reply, or a late
+    in-flight envelope landing after the call's deadline — the runtime's
+    requeue path resends the same fragments under a fresh transport message
+    id, so receiver-side msg dedup cannot catch the duplicate. The
+    coordinator must drop it by (so_id, world, seq) instead of
+    double-ingesting."""
+
+    def _cluster(self, tmp_path):
+        from repro.core import LocalCluster
+
+        return LocalCluster(
+            tmp_path / "c", refresh_interval=None, group_commit_interval=99
+        )
+
+    def test_requeued_report_not_double_processed(self, tmp_path):
+        from repro.services.counter import CounterStateObject
+
+        from conftest import wait_committed
+
+        with self._cluster(tmp_path) as cluster:
+            so = cluster.add("a", lambda: CounterStateObject(tmp_path / "so_a"))
+            real = cluster.coordinator
+            delivered = []
+
+            class DeliverThenTimeout:
+                """Transport model of the bug: the request reaches the
+                coordinator, the reply is lost, the caller sees a timeout."""
+
+                fail_next = 0
+
+                def report(self, so_id, reports):
+                    real.report(so_id, reports)  # delivery DID happen
+                    delivered.append([r.vertex for r in reports])
+                    if self.fail_next:
+                        self.fail_next -= 1
+                        raise TimeoutError("reply lost after delivery")
+
+                def __getattr__(self, name):
+                    return getattr(real, name)
+
+            proxy = DeliverThenTimeout()
+            so.runtime.coordinator = proxy
+
+            so.increment(None)
+            so.runtime.maybe_persist(force=True)
+            assert wait_committed(so, 1)
+            proxy.fail_next = 1
+            import pytest as _pytest
+
+            with _pytest.raises(TimeoutError):
+                so.runtime._flush_reports()  # requeue fires
+            # the retry resends the SAME fragment (fresh msg id in the real
+            # fabric) and must be dropped server-side, not re-ingested
+            so.runtime._flush_reports()
+            assert len(delivered) == 2  # genuinely delivered twice...
+            assert delivered[0] == delivered[1]
+            assert real.stats()["dup_reports_dropped"] >= 1  # ...counted once
+            # queue drained: nothing left to resend a third time
+            assert so.runtime._report_queue == []
+            # and the graph view is coherent (one vertex per label)
+            st = real.stats()
+            assert st["graph_vertices"] == len(so.runtime.stats()["labels"])
+
+    def test_flush_batch_dedups_by_vertex(self, tmp_path):
+        from repro.core.ids import PersistReport, Vertex
+        from repro.services.counter import CounterStateObject
+
+        with self._cluster(tmp_path) as cluster:
+            so = cluster.add("a", lambda: CounterStateObject(tmp_path / "so_a"))
+            batches = []
+            real = cluster.coordinator
+
+            class Recording:
+                def report(self, so_id, reports):
+                    batches.append(list(reports))
+                    real.report(so_id, reports)
+
+                def __getattr__(self, name):
+                    return getattr(real, name)
+
+            so.runtime.coordinator = Recording()
+            v = Vertex("a", 0, 0)
+            with so.runtime._mu:
+                so.runtime._report_queue = [
+                    PersistReport(v, (), seq=5),
+                    PersistReport(v, (), seq=5),  # duplicate queue entry
+                ]
+            so.runtime._flush_reports()
+            assert len(batches[-1]) == 1  # batch canonicalized client-side
+
+    def test_seen_compaction_is_per_world(self, tmp_path):
+        """Compaction of the seen-set must floor per world: a restarted
+        incarnation starts a new world at seq 0, and a global floor computed
+        from the old world's high seqs would erase its live dedup window
+        (code-review regression)."""
+        from repro.core.ids import PersistReport, Vertex
+
+        with self._cluster(tmp_path) as cluster:
+            coord = cluster.coordinator
+            # a long-lived previous incarnation: world 0, seqs up to ~17k
+            coord._report_seen["x"] = {(0, s) for s in range(17000)}
+            r = PersistReport(Vertex("x", 1, 0), (), seq=0)
+            coord.report("x", [r])  # new world entry + triggers compaction
+            assert (1, 0) in coord._report_seen["x"]
+            coord.report("x", [r])  # transport-retry duplicate
+            assert coord.stats()["dup_reports_dropped"] == 1
+
+    def test_fragment_resends_never_deduped(self, tmp_path):
+        """seq=-1 (connect/fragment resends rebuilt from disk) must always
+        be ingestible — a restarted coordinator depends on full resends."""
+        from repro.core.ids import PersistReport, Vertex
+
+        with self._cluster(tmp_path) as cluster:
+            coord = cluster.coordinator
+            r = PersistReport(Vertex("x", 0, 0), ())  # seq=-1
+            coord.report("x", [r])
+            coord.report("x", [r])
+            assert coord.stats()["dup_reports_dropped"] == 0

@@ -1,5 +1,5 @@
-"""Property-based protocol tests (hypothesis): under ARBITRARY interleavings
-of speculative operations, persists, and crash-restarts, the system always
+"""Property-based protocol tests: under ARBITRARY interleavings of
+speculative operations, persists, and crash-restarts, the system always
 recovers to a causally-consistent prefix:
 
   invariant 1 (prefix): a consumer never holds state derived from a
@@ -7,39 +7,132 @@ recovers to a causally-consistent prefix:
   invariant 2 (monotone boundary): the recoverable boundary never regresses;
   invariant 3 (no zombie epochs): all live SOs converge to the same world
       after refresh.
+
+Plus the DecisionIndex differential property (mirroring the
+incremental-boundary equivalence harness in test_incremental_boundary.py):
+under random decision/probe/rebuild interleavings, the compacted per-SO
+suffix-minima index classifies every vertex exactly like the linear scan
+over the full decision list. The seeded sweep runs on the
+without-hypothesis CI leg too; hypothesis widens the same space.
 """
 from __future__ import annotations
 
+import random
+
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from repro.core.ids import DecisionIndex, RollbackDecision, Vertex, vertex_rolled_back
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # hypothesis is optional (CI runs a without-matrix leg)
+    HAVE_HYPOTHESIS = False
 
 from repro.core import DelayMessage, LocalCluster
 from repro.services.counter import CounterStateObject
 
 
-# op alphabet: ("inc", ) producer increment + mirror to consumer;
-#              ("persist", who) force persist; ("kill", who) crash-restart
-OPS = st.lists(
-    st.one_of(
-        st.just(("inc",)),
-        st.tuples(st.just("persist"), st.sampled_from(["p", "c"])),
-        st.tuples(st.just("kill"), st.sampled_from(["p", "c"])),
-    ),
-    min_size=1,
-    max_size=24,
-)
+# --------------------------------------------------------------------------- #
+# DecisionIndex ≡ linear-scan oracle                                           #
+# --------------------------------------------------------------------------- #
+_SOS = [f"so{i}" for i in range(4)] + ["注文-svc"]
 
 
-@settings(
-    max_examples=20,
-    deadline=None,
-    suppress_health_check=[HealthCheck.function_scoped_fixture, HealthCheck.data_too_large],
-)
-@given(ops=OPS)
-def test_prefix_consistency_under_arbitrary_failures(tmp_path_factory, ops):
+def _random_decision(rng: random.Random, fsn: int) -> RollbackDecision:
+    targets = {
+        so: rng.randint(-1, 12)
+        for so in rng.sample(_SOS, rng.randint(0, len(_SOS)))
+    }
+    failed = rng.choice(_SOS)
+    return RollbackDecision(fsn=fsn, failed=failed, targets=targets)
+
+
+def _probe_vertices(rng: random.Random, n: int):
+    return [
+        Vertex(rng.choice(_SOS), rng.randint(0, 8), rng.randint(-1, 14))
+        for _ in range(n)
+    ]
+
+
+def test_decision_index_equals_linear_scan_seeded_sweep():
+    """Deterministic PRNG sweep: random report(probe)/rollback(add)/
+    prune(rebuild-from-scratch) interleavings, classification equivalence
+    checked against the ``vertex_rolled_back`` linear scan after every op
+    — including fsn gaps, empty target maps, and -1 watermarks."""
+    for seed in range(200):
+        rng = random.Random(seed)
+        decisions = []
+        idx = DecisionIndex()
+        fsn = 0
+        for _ in range(rng.randint(1, 25)):
+            roll = rng.random()
+            if roll < 0.45 or not decisions:
+                fsn += rng.randint(1, 3)  # fsn gaps: shard-allocated ranges
+                d = _random_decision(rng, fsn)
+                decisions.append(d)
+                idx.add(d)
+            elif roll < 0.75:
+                pass  # probe-only round (report classification)
+            else:
+                # "prune"/compaction round: a fresh index over the same
+                # decision list (what connect() builds) must agree with the
+                # incrementally-grown one
+                idx = DecisionIndex(decisions)
+            for v in _probe_vertices(rng, 8):
+                got = idx.invalidates(v)
+                want = vertex_rolled_back(v, decisions)
+                assert got == want, (
+                    f"seed={seed} divergence on {v!r}: index={got} scan={want} "
+                    f"decisions={[d.to_json() for d in decisions]}"
+                )
+            probes = _probe_vertices(rng, 4)
+            assert idx.any_invalid(probes) == any(
+                vertex_rolled_back(v, decisions) for v in probes
+            )
+
+
+if HAVE_HYPOTHESIS:
+    _H_SO = st.sampled_from([f"so{i}" for i in range(4)] + ["注文-svc"])
+    _H_DECISIONS = st.lists(
+        st.builds(
+            RollbackDecision,
+            fsn=st.integers(min_value=1, max_value=40),
+            failed=_H_SO,
+            targets=st.dictionaries(_H_SO, st.integers(min_value=-1, max_value=12), max_size=5),
+        ),
+        max_size=12,
+    )
+    _H_VERTICES = st.lists(
+        st.builds(
+            Vertex,
+            so_id=_H_SO,
+            world=st.integers(min_value=0, max_value=40),
+            version=st.integers(min_value=-1, max_value=14),
+        ),
+        min_size=1,
+        max_size=12,
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(decisions=_H_DECISIONS, probes=_H_VERTICES)
+    def test_decision_index_equals_linear_scan_hypothesis(decisions, probes):
+        idx = DecisionIndex(decisions)
+        grown = DecisionIndex()
+        for d in decisions:
+            grown.add(d)
+        for v in probes:
+            want = vertex_rolled_back(v, decisions)
+            assert idx.invalidates(v) == want
+            assert grown.invalidates(v) == want
+        assert idx.any_invalid(probes) == any(
+            vertex_rolled_back(v, decisions) for v in probes
+        )
+
+
+def _run_prefix_consistency(tmp_path_factory, ops):
     root = tmp_path_factory.mktemp("prop")
     with LocalCluster(root, refresh_interval=None, group_commit_interval=99) as cluster:
         cluster.add("p", lambda: CounterStateObject(root / "p"))
@@ -82,3 +175,45 @@ def test_prefix_consistency_under_arbitrary_failures(tmp_path_factory, ops):
         assert c.value <= p.value, (c.value, p.value)
         # invariant 3: same failure epoch everywhere
         assert p.runtime.world == c.runtime.world
+
+
+if HAVE_HYPOTHESIS:
+    # op alphabet: ("inc", ) producer increment + mirror to consumer;
+    #              ("persist", who) force persist; ("kill", who) crash-restart
+    OPS = st.lists(
+        st.one_of(
+            st.just(("inc",)),
+            st.tuples(st.just("persist"), st.sampled_from(["p", "c"])),
+            st.tuples(st.just("kill"), st.sampled_from(["p", "c"])),
+        ),
+        min_size=1,
+        max_size=24,
+    )
+
+    @settings(
+        max_examples=20,
+        deadline=None,
+        suppress_health_check=[
+            HealthCheck.function_scoped_fixture,
+            HealthCheck.data_too_large,
+        ],
+    )
+    @given(ops=OPS)
+    def test_prefix_consistency_under_arbitrary_failures(tmp_path_factory, ops):
+        _run_prefix_consistency(tmp_path_factory, ops)
+
+
+def test_prefix_consistency_seeded_smoke(tmp_path_factory):
+    """One deterministic interleaving on the without-hypothesis leg, so the
+    cluster-level property has coverage in every CI matrix cell."""
+    rng = random.Random(20260730)
+    ops = []
+    for _ in range(18):
+        r = rng.random()
+        if r < 0.6:
+            ops.append(("inc",))
+        elif r < 0.8:
+            ops.append(("persist", rng.choice(["p", "c"])))
+        else:
+            ops.append(("kill", rng.choice(["p", "c"])))
+    _run_prefix_consistency(tmp_path_factory, ops)

@@ -105,15 +105,17 @@ class TestKVStore:
 # --------------------------------------------------------------------------- #
 # workflow engine (TravelReservations, paper Fig. 9)                           #
 # --------------------------------------------------------------------------- #
-def _mk_travel(cluster, tmp_path, speculative=True, n_services=3):
+def _mk_travel(cluster, tmp_path, runtime="dse", n_services=3):
     names = [f"svc{i}" for i in range(n_services)]
     kvs = []
     for n in names:
-        kv = cluster.add(n, (lambda n=n: SpeculativeKVStore(tmp_path / f"kv_{n}")))
+        kv = cluster.add(
+            n, (lambda n=n: SpeculativeKVStore(tmp_path / f"kv_{n}")), runtime=runtime
+        )
         kv.stock("item", 100)
         kvs.append(kv)
     wf = cluster.add(
-        "wf", lambda: WorkflowEngine(tmp_path / "wf", speculative=speculative)
+        "wf", lambda: WorkflowEngine(tmp_path / "wf"), runtime=runtime
     )
     return wf, kvs
 
@@ -135,10 +137,17 @@ class TestWorkflow:
         assert wf.workflow_state("wf1")["status"] == "done"
 
     def test_baseline_mode_also_completes(self, cluster_factory, tmp_path):
+        """The durable-execution baseline (synchronous persistence at every
+        transition, DurableRuntime) runs the identical orchestration code."""
         c = cluster_factory(group_commit_interval=0.005)
-        wf, kvs = _mk_travel(c, tmp_path, speculative=False)
+        wf, kvs = _mk_travel(c, tmp_path, runtime="durable")
         out = wf.run_workflow("wf1", _steps(kvs, "wf1"))
         assert out is not None
+        results, _ = out
+        assert results == [True, True, True]
+        # durable semantics: the acked workflow is already non-speculative
+        assert wf.runtime.kind == "durable"
+        assert wf.runtime.stats()["committed"] >= 0
 
     def test_crash_rolls_back_and_resumes_consistently(self, cluster_factory, tmp_path):
         c = cluster_factory(refresh_interval=None, group_commit_interval=99)
