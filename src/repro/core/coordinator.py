@@ -19,18 +19,24 @@ therefore rolled back (paper §5.3 acknowledges this over-rollback; the
 StateObject-side skip mitigation in ``DSERuntime._apply_decision`` recovers
 the common case).
 
-Coordinator recovery (paper §4.3): a restarted coordinator replays the log
-to recover membership + past decisions, then asks every participant to
-resend its locally persisted graph fragments; it refuses to answer boundary
-queries (returns ``None``) until every participant has responded, which
-guarantees a view at least as fresh as the pre-failure one.
+Coordinator recovery (paper §4.3): a restarted coordinator replays its
+durable store to recover membership + past decisions, then asks every
+participant to resend its locally persisted graph fragments; it refuses to
+answer boundary queries (returns ``None``) until every participant has
+responded, which guarantees a view at least as fresh as the pre-failure one.
+
+Bounded recovery (DESIGN.md §11): the durable store is a
+:class:`~repro.store.CompactingLog` — ``checkpoint()`` folds the current
+durable cut (graph at the exposure floor, non-retired decisions, world
+counter, per-SO flush seqs) into a binary snapshot and rotates the JSONL
+log to a suffix, so replay is O(live state + suffix) instead of O(every
+record since the cluster was born), and fully-superseded decisions (whose
+lost windows every exposure floor has passed) retire from the durable cut,
+the in-memory lists, and every future ConnectResponse.
 """
 from __future__ import annotations
 
 import bisect
-import json
-import os
-import threading
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
@@ -38,6 +44,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 from .clock import Clock, REAL_CLOCK
 from .graph import DependencyGraph
 from .ids import DecisionIndex, PersistReport, RollbackDecision, Vertex
+from ..store import CompactingLog, CoordinatorSnapshot, decode_snapshot, encode_snapshot
 
 
 @dataclass
@@ -62,55 +69,28 @@ class PollResponse:
     boundary_seq: int = -1
 
 
-class CoordinatorLog:
-    """Synchronous JSONL append log — the coordinator's only durable state.
-
-    Backed here by a local file + fsync; in production this would be a Raft
-    group or reliable cloud storage (paper Fig. 8) — the interface is the
-    same: ordered, durable appends and full replay.
-    """
-
-    def __init__(self, path: Path) -> None:
-        self.path = Path(path)
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        self._fh = open(self.path, "a+b")
-
-    def append(self, record: dict) -> None:
-        data = json.dumps(record).encode() + b"\n"
-        self._fh.write(data)
-        self._fh.flush()
-        os.fsync(self._fh.fileno())
-
-    def replay(self) -> List[dict]:
-        out: List[dict] = []
-        with open(self.path, "rb") as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    out.append(json.loads(line.decode()))
-                except Exception:
-                    break  # torn tail write: ignore the partial record
-        return out
-
-    def close(self) -> None:
-        try:
-            self._fh.close()
-        except Exception:
-            pass
-
-
 class Coordinator:
     """Embodies cluster consensus as the (singleton) leader (paper §4.2)."""
 
     def __init__(
-        self, log_path: Path, recovery_timeout: float = 30.0, clock: Clock = REAL_CLOCK
+        self,
+        log_path: Path,
+        recovery_timeout: float = 30.0,
+        clock: Clock = REAL_CLOCK,
+        *,
+        checkpoint_records: Optional[int] = 256,
+        checkpoint_bytes: int = 1 << 20,
     ) -> None:
         self.clock = clock
         self._lock = clock.rlock()
         self._recovered_cv = clock.condition(self._lock)
-        self._log = CoordinatorLog(log_path)
+        #: durable store: snapshot + JSONL suffix; the thresholds arm the
+        #: auto-compaction trigger (None disables checkpoints entirely).
+        self._log = CompactingLog(
+            log_path,
+            checkpoint_records=checkpoint_records,
+            checkpoint_bytes=checkpoint_bytes,
+        )
         self._graph = DependencyGraph()
         self._members: Set[str] = set()
         #: decisions sorted by fsn, with a parallel fsn list (bisect) and a
@@ -119,22 +99,53 @@ class Coordinator:
         self._decision_fsns: List[int] = []
         self._dindex = DecisionIndex()
         self._fsn = 0
+        #: decisions with fsn <= this were retired by the compactor: every
+        #: exposure floor passed their lost windows, so nothing they could
+        #: invalidate can ever be reported, resent, or adopted again — and
+        #: every live (or future) incarnation's world is already past them.
+        self._retired_upto = 0
+        #: the exposure floor of the last installed (or recovered) snapshot —
+        #: the fallback cut for a checkpoint taken before a live floor exists
+        self._snapshot_floor: Dict[str, int] = {}
+        self.checkpoints = 0
         self._recovery_timeout = recovery_timeout
         #: so_id -> set of (world, seq) report flushes already processed:
         #: drops the duplicate when a transport retry of a timed-out report
         #: RPC lands after the runtime's requeue path already resent it.
-        #: In-memory only — a restarted coordinator re-ingests (idempotent).
+        #: Part of the snapshot's durable cut, so a snapshot-recovered
+        #: coordinator still single-counts a pre-crash flush's retry (a
+        #: suffix-era duplicate merely re-ingests, which is idempotent).
         self._report_seen: Dict[str, Set[Tuple[int, int]]] = {}
         self.dup_reports_dropped = 0
 
-        # Replay the durable log: membership + decisions.
-        for rec in self._log.replay():
+        # Recover the durable cut, then replay the suffix: membership +
+        # decisions (suffix decisions must also re-apply their truncations,
+        # because the snapshot's graph predates them).
+        snap_blob, suffix = self._log.replay()
+        restored = snap_blob is not None
+        if restored:
+            snap = decode_snapshot(snap_blob)
+            self._fsn = snap.fsn
+            self._retired_upto = snap.retired_upto
+            self._members = set(snap.members)
+            for d in snap.decisions:
+                self._note_decision(d)
+            self._graph.restore_state(snap.graph)
+            self._snapshot_floor = dict(snap.floor)
+            self._report_seen = {so: set(pairs) for so, pairs in snap.report_seen.items()}
+        for rec in suffix:
             if rec.get("type") == "member":
                 self._members.add(rec["so_id"])
             elif rec.get("type") == "decision":
-                self._note_decision(RollbackDecision.from_json(rec))
+                d = RollbackDecision.from_json(rec)
+                self._note_decision(d)
+                if restored:
+                    for so, t in d.targets.items():
+                        self._graph.truncate(so, t)
         # If members existed, this is a restarted coordinator: the graph view
-        # must be rebuilt from participants before boundaries can be served.
+        # must be rebuilt from participants before boundaries can be served
+        # (the snapshot is the warm O(live) base; resends are the freshness
+        # guarantee and, post-GC, ship only the O(live) suffix).
         self._awaiting: Set[str] = set(self._members)
         #: lock-free mirror of ``bool(self._awaiting)`` (read by the sharded
         #: DecisionBus without taking this coordinator's lock).
@@ -204,6 +215,11 @@ class Coordinator:
                     # bound).
                     for so, b in bound.items():
                         self._graph.prune(so, b)
+        # Auto-compaction rides the boundary recompute: the floor is fresh
+        # here, the lock is held, and log growth (decisions/members) always
+        # marks the boundary dirty, so the trigger is visited promptly.
+        if self._log.should_checkpoint():
+            self._checkpoint_locked(dict(self._boundary_cache))
         if known_seq == self._boundary_seq:
             return None, self._boundary_seq
         return dict(self._boundary_cache), self._boundary_seq
@@ -238,12 +254,22 @@ class Coordinator:
     def _decide(self, so_id: str, surviving: int) -> RollbackDecision:
         """Compute, durably log, and apply a rollback decision."""
         with self._lock:
+            # Top persisted label per SO BEFORE any truncation: every vertex
+            # this decision can ever invalidate lies in (target, lost[so]] —
+            # the retirement witness the snapshot compactor checks floors
+            # against (DESIGN.md §11).
+            tops = self._graph.committed_watermarks()
             # Remove the failed SO's lost vertices, then find the greatest
             # closure of what remains (iteratively removing dangling refs).
             self._graph.truncate(so_id, surviving)
             targets = self._graph.rollback_targets(so_id, surviving)
             fsn = self._fsn + 1
-            decision = RollbackDecision(fsn=fsn, failed=so_id, targets=targets)
+            decision = RollbackDecision(
+                fsn=fsn,
+                failed=so_id,
+                targets=targets,
+                lost={so: tops.get(so, t) for so, t in targets.items()},
+            )
             # Consensus step: the decision must be durable before any
             # participant can observe it (paper §4.3, Orchestrating Rollback).
             self._log.append({"type": "decision", **decision.to_json()})
@@ -421,6 +447,84 @@ class Coordinator:
         )
 
     # ------------------------------------------------------------------ #
+    # snapshot + compaction (repro.store, DESIGN.md §11)                 #
+    # ------------------------------------------------------------------ #
+    def checkpoint(self) -> int:
+        """Fold the current durable cut into a snapshot and rotate the log;
+        returns the new store generation. Safe at any time — the cut is
+        taken under the lock, and a crash mid-checkpoint recovers from
+        whichever generation the manifest names."""
+        with self._lock:
+            # freshen the floor first (no-op while the view is incomplete:
+            # an empty floor just means nothing retires this round). This
+            # may itself fire the auto-compaction trigger — don't snapshot
+            # the same cut twice back-to-back if it did.
+            gen = self._log.generation
+            self._boundary_locked()
+            if self._log.generation != gen:
+                return self._log.generation
+            return self._checkpoint_locked(dict(self._boundary_cache))
+
+    def _retire_decisions_locked(self, floor: Dict[str, int]) -> None:
+        """Drop the longest decision prefix whose lost windows every target
+        floor has passed (call with self._lock held).
+
+        Soundness (DESIGN.md §11): ``floor[so] > lost[so]`` for a target
+        means every vertex the decision could still invalidate is strictly
+        below ``so``'s exposure floor — already GC'd from (or about to be
+        GC'd from) its fragment store, never resent, never adoptable — and,
+        because post-decision reports at the old world are themselves
+        invalidated, the floor can only have passed the lost window after
+        ``so`` applied the decision, so every live incarnation's world is
+        past its fsn and no poll delta can ever need it. Retirement is
+        prefix-only so the durable cut records a single ``retired_upto``.
+        """
+        i = 0
+        while i < len(self._decisions):
+            d = self._decisions[i]
+            if not d.lost or not all(
+                floor.get(so, -1) > d.lost.get(so, t) for so, t in d.targets.items()
+            ):
+                break
+            i += 1
+        if i:
+            self._retired_upto = self._decisions[i - 1].fsn
+            del self._decisions[:i]
+            del self._decision_fsns[:i]
+            self._dindex = DecisionIndex(self._decisions)
+
+    def _checkpoint_locked(self, floor: Dict[str, int]) -> int:
+        if self._log.checkpoint_records is None:
+            # compaction disabled: no snapshot may be installed, and the
+            # in-memory decision list must then match the durable log —
+            # don't retire either (the log owns the same contract; this
+            # guard just keeps retirement/stats consistent with it)
+            return self._log.generation
+        if not floor:
+            # no live floor (e.g. checkpoint requested right after a restart,
+            # before fragment resends complete): fall back to the previous
+            # snapshot's floor. Sound because exposure floors never retreat
+            # (rollback targets are >= every exposed floor), so the old cut
+            # is a valid lower bound and retirement stays conservative.
+            floor = dict(self._snapshot_floor)
+        self._retire_decisions_locked(floor)
+        self._snapshot_floor = dict(floor)
+        blob = encode_snapshot(
+            CoordinatorSnapshot(
+                fsn=self._fsn,
+                retired_upto=self._retired_upto,
+                members=sorted(self._members),
+                decisions=list(self._decisions),
+                graph=self._graph.export_state(),
+                floor=floor,
+                report_seen={so: set(s) for so, s in self._report_seen.items() if s},
+            )
+        )
+        gen = self._log.checkpoint(blob)
+        self.checkpoints += 1
+        return gen
+
+    # ------------------------------------------------------------------ #
     # introspection                                                      #
     # ------------------------------------------------------------------ #
     def current_boundary(self) -> Optional[Dict[str, int]]:
@@ -428,14 +532,18 @@ class Coordinator:
 
     def stats(self) -> Dict[str, object]:
         with self._lock:
-            snap = self._graph.snapshot()
+            _, vertices = self._graph.size()  # counters, not a deep copy
             return {
                 "members": sorted(self._members),
                 "fsn": self._fsn,
                 "decisions": len(self._decisions),
-                "graph_vertices": sum(len(per) for per in snap.values()),
+                "retired_upto": self._retired_upto,
+                "graph_vertices": vertices,
                 "awaiting": sorted(self._awaiting),
                 "dup_reports_dropped": self.dup_reports_dropped,
+                "checkpoints": self.checkpoints,
+                "log_generation": self._log.generation,
+                "log_records": self._log.records_since_checkpoint,
             }
 
     def close(self) -> None:

@@ -175,6 +175,36 @@ class DependencyGraph:
         with self._lock:
             return {so: {v: list(d) for v, d in per.items()} for so, per in self._deps.items()}
 
+    def size(self) -> Tuple[int, int]:
+        """(members, vertices) — O(members) counters for stats/telemetry,
+        without the full deep copy ``snapshot()`` makes."""
+        with self._lock:
+            return len(self._labels), sum(len(ls) for ls in self._labels.values())
+
+    # -- durable-cut export/restore (repro.store, DESIGN.md §11) ---------------
+    def export_state(self) -> Dict[str, List[Tuple[int, DepList]]]:
+        """The retained view as ``{so: [(label, deps), ...]}`` (labels
+        sorted). Because ``prune`` collapses everything below the exposure
+        floor to the floor watermark, this is the graph *at the floor* —
+        O(live state), the shape the coordinator snapshot persists."""
+        with self._lock:
+            return {
+                so: [(v, list(self._deps[so].get(v, ()))) for v in labels]
+                for so, labels in self._labels.items()
+            }
+
+    def restore_state(self, state: Dict[str, List[Tuple[int, DepList]]]) -> None:
+        """Install an exported view (snapshot recovery). Replaces same-SO
+        content wholesale; the incremental boundary state is rebuilt from
+        the fixpoint oracle on the next query — the same fall-back the
+        rollback path uses, so the §9 equivalence property covers it."""
+        with self._lock:
+            for so, entries in state.items():
+                self._deps[so] = {v: list(deps) for v, deps in entries}
+                self._labels[so] = sorted(self._deps[so])
+                self._inc_bound.setdefault(so, -1)
+            self._invalidate_incremental()
+
     # -- fixpoints ---------------------------------------------------------------
     def recoverable_boundary(
         self,

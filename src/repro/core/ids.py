@@ -40,6 +40,14 @@ K_BOUNDARY = 7
 #: writers emit v2, readers accept both so pre-seq blobs stay decodable.
 K_REPORT2 = 8
 K_REPORTS2 = 9
+#: decision bodies gained per-SO ``lost`` watermarks (PR 5, snapshot
+#: retirement rule — DESIGN.md §11); same versioning rule: new kind bytes,
+#: readers accept the pre-lost kinds with ``lost={}`` (never retirable).
+K_DECISION2 = 10
+K_DECISIONS2 = 11
+#: reserved by repro.store (DESIGN.md §11): coordinator snapshot + manifest
+K_SNAPSHOT = 12
+K_MANIFEST = 13
 
 
 def _w_uvarint(out: bytearray, n: int) -> None:
@@ -227,14 +235,20 @@ class RollbackDecision:
 
     ``fsn``      — failure sequence number; becomes the new ``world``.
     ``targets``  — per-SO version watermark to restore to (surviving prefix).
-    ``lost``     — per-SO version watermark *above which* vertices are lost
-                   (== targets; kept explicit for skip-rollback checks).
     ``failed``   — the SO whose failure triggered this decision.
+    ``lost``     — per-SO top *persisted* label at decision time: every
+                   vertex this decision can ever invalidate has version in
+                   ``(targets[so], lost[so]]``. Once the exposure floor of
+                   every target passes its ``lost`` watermark, the decision
+                   can never match anything again and the snapshot compactor
+                   retires it (DESIGN.md §11). Empty => unknown (a legacy
+                   decision): never retired.
     """
 
     fsn: int
     failed: str
     targets: Mapping[str, int] = field(default_factory=dict)
+    lost: Mapping[str, int] = field(default_factory=dict)
 
     def invalidates(self, v: Vertex) -> bool:
         """True iff this decision rolled back vertex ``v``."""
@@ -246,7 +260,10 @@ class RollbackDecision:
         return v.version > target
 
     def to_json(self) -> dict:
-        return {"fsn": self.fsn, "failed": self.failed, "targets": dict(self.targets)}
+        out = {"fsn": self.fsn, "failed": self.failed, "targets": dict(self.targets)}
+        if self.lost:
+            out["lost"] = dict(self.lost)
+        return out
 
     @staticmethod
     def from_json(obj: dict) -> "RollbackDecision":
@@ -254,6 +271,7 @@ class RollbackDecision:
             fsn=int(obj["fsn"]),
             failed=str(obj["failed"]),
             targets={str(k): int(v) for k, v in obj["targets"].items()},
+            lost={str(k): int(v) for k, v in obj.get("lost", {}).items()},
         )
 
 
@@ -380,7 +398,8 @@ def _read_report_body(
 
 
 def _expect_either(raw: bytes, kind_v2: int, kind_legacy: int) -> Tuple[List[str], int, bool]:
-    """(strings, offset, with_seq) for a v2-or-legacy report blob."""
+    """(strings, offset, is_v2) for a v2-or-legacy blob (reports: v2 adds
+    the seq field; decisions: v2 adds the lost watermarks)."""
     if len(raw) >= 2 and raw[0] == WIRE_MAGIC and raw[1] == kind_legacy:
         strings, i = _StrTable.read(raw, 2)
         return strings, i, False
@@ -420,41 +439,59 @@ def decode_reports(raw: bytes) -> List[PersistReport]:
     return out
 
 
-def _write_decision_body(body: bytearray, tab: _StrTable, d: RollbackDecision) -> None:
-    _w_uvarint(body, d.fsn)
-    _w_uvarint(body, tab.index(d.failed))
-    _w_uvarint(body, len(d.targets))
-    for so, t in sorted(d.targets.items()):
+def _write_watermarks(body: bytearray, tab: _StrTable, wm: Mapping[str, int]) -> None:
+    _w_uvarint(body, len(wm))
+    for so, t in sorted(wm.items()):
         _w_uvarint(body, tab.index(so))
         _w_svarint(body, t)
 
 
-def _read_decision_body(raw: bytes, i: int, strings: List[str]) -> Tuple[RollbackDecision, int]:
-    fsn, i = _r_uvarint(raw, i)
-    fi, i = _r_uvarint(raw, i)
+def _read_watermarks(raw: bytes, i: int, strings: List[str]) -> Tuple[Dict[str, int], int]:
     n, i = _r_uvarint(raw, i)
-    targets: Dict[str, int] = {}
+    out: Dict[str, int] = {}
     for _ in range(n):
         si, i = _r_uvarint(raw, i)
         t, i = _r_svarint(raw, i)
-        targets[_str_at(strings, si)] = t
-    return RollbackDecision(fsn=fsn, failed=_str_at(strings, fi), targets=targets), i
+        out[_str_at(strings, si)] = t
+    return out, i
+
+
+def _write_decision_body(body: bytearray, tab: _StrTable, d: RollbackDecision) -> None:
+    _w_uvarint(body, d.fsn)
+    _w_uvarint(body, tab.index(d.failed))
+    _write_watermarks(body, tab, d.targets)
+    _write_watermarks(body, tab, d.lost)
+
+
+def _read_decision_body(
+    raw: bytes, i: int, strings: List[str], with_lost: bool = True
+) -> Tuple[RollbackDecision, int]:
+    fsn, i = _r_uvarint(raw, i)
+    fi, i = _r_uvarint(raw, i)
+    targets, i = _read_watermarks(raw, i, strings)
+    lost: Dict[str, int] = {}
+    if with_lost:
+        lost, i = _read_watermarks(raw, i, strings)
+    return (
+        RollbackDecision(fsn=fsn, failed=_str_at(strings, fi), targets=targets, lost=lost),
+        i,
+    )
 
 
 def encode_decision(d: RollbackDecision) -> bytes:
-    prefix, body, tab = _begin(K_DECISION)
+    prefix, body, tab = _begin(K_DECISION2)
     _write_decision_body(body, tab, d)
     return _finish(prefix, body, tab)
 
 
 def decode_decision(raw: bytes) -> RollbackDecision:
-    strings, i = _expect(raw, K_DECISION)
-    d, _ = _read_decision_body(raw, i, strings)
+    strings, i, with_lost = _expect_either(raw, K_DECISION2, K_DECISION)
+    d, _ = _read_decision_body(raw, i, strings, with_lost)
     return d
 
 
 def encode_decisions(decisions: Sequence[RollbackDecision]) -> bytes:
-    prefix, body, tab = _begin(K_DECISIONS)
+    prefix, body, tab = _begin(K_DECISIONS2)
     _w_uvarint(body, len(decisions))
     for d in decisions:
         _write_decision_body(body, tab, d)
@@ -462,11 +499,11 @@ def encode_decisions(decisions: Sequence[RollbackDecision]) -> bytes:
 
 
 def decode_decisions(raw: bytes) -> List[RollbackDecision]:
-    strings, i = _expect(raw, K_DECISIONS)
+    strings, i, with_lost = _expect_either(raw, K_DECISIONS2, K_DECISIONS)
     n, i = _r_uvarint(raw, i)
     out: List[RollbackDecision] = []
     for _ in range(n):
-        d, i = _read_decision_body(raw, i, strings)
+        d, i = _read_decision_body(raw, i, strings, with_lost)
         out.append(d)
     return out
 

@@ -120,16 +120,16 @@ class DSERuntime:
     # ------------------------------------------------------------------ #
     def connect(self) -> None:
         """Register with the coordinator; adopt rollback state; make an
-        initial durable version so a restore floor always exists."""
-        listed = self.so.ListVersions()
-        fragments: List[PersistReport] = []
-        for version, meta in listed:
-            try:
-                world, v, deps, _user = decode_metadata(meta)
-            except Exception:
-                continue
-            fragments.append(PersistReport(Vertex(self.so_id, world, v), deps))
+        initial durable version so a restore floor always exists.
 
+        The fragment list is O(live state), not O(history): the previous
+        incarnation's fragment GC (``_apply_prune`` + ``_resend_fragments``)
+        keeps the durable store bounded to the exposure floor and above, so
+        a reconnect ships only the live window (DESIGN.md §11). No floor
+        filter applies here — a fresh incarnation has no boundary yet, and
+        the disk it inherits is already the pruned suffix.
+        """
+        fragments, _, _ = self._list_fragments()
         resp = self.coordinator.connect(self.so_id, fragments)
         idx = DecisionIndex(resp.decisions)
         with self._mu:
@@ -428,14 +428,53 @@ class DSERuntime:
                     self._boundary_cond.notify_all()
             self._apply_prune()
 
-    def _resend_fragments(self) -> None:
-        fragments: List[PersistReport] = []
+    def _list_fragments(
+        self, floor: int = -1, dindex: Optional[DecisionIndex] = None
+    ) -> tuple:
+        """Rebuild PersistReports from the durable store as ``(fragments,
+        dropped, anchor)``, skipping versions that are strictly below the
+        durable **anchor** — the greatest persisted label <= the exposure
+        floor (the floor is a watermark and may sit in a label gap from
+        relabeling; the anchor is the label that actually carries the floor
+        state, and always ships) — or that a known rollback decision has
+        invalidated (stale blobs above an old target: the coordinator would
+        drop them at ingest anyway)."""
+        decoded = []
         for version, meta in self.so.ListVersions():
             try:
-                world, v, deps, _ = decode_metadata(meta)
+                world, v, deps, _user = decode_metadata(meta)
             except Exception:
                 continue
+            decoded.append((v, world, deps))
+
+        def valid(v: int, world: int) -> bool:
+            return dindex is None or not dindex.invalidates(Vertex(self.so_id, world, v))
+
+        # the anchor must be elected among VALID labels: a decision-
+        # invalidated stale blob sitting in (target, floor] would otherwise
+        # win the max, get dropped by the decision filter below, and take
+        # the genuine floor carrier (every valid label under it) with it
+        anchor = max((v for v, w, _ in decoded if v <= floor and valid(v, w)), default=-1)
+        fragments: List[PersistReport] = []
+        dropped = 0
+        for v, world, deps in decoded:
+            if v < anchor or not valid(v, world):
+                dropped += 1
+                continue
             fragments.append(PersistReport(Vertex(self.so_id, world, v), deps))
+        return fragments, dropped, anchor
+
+    def _resend_fragments(self) -> None:
+        with self._mu:
+            floor = self._boundary.get(self.so_id, -1)
+            idx = self._dindex
+        fragments, dropped, anchor = self._list_fragments(floor, idx)
+        # The coordinator must never need a GC'd fragment: whenever history
+        # was dropped, the anchor label (whose watermark the coordinator's
+        # durable snapshot already records) must still be in the resend.
+        assert not dropped or anchor < 0 or any(
+            r.vertex.version == anchor for r in fragments
+        ), f"{self.so_id}: fragment GC dropped the anchor ({anchor}, floor={floor})"
         self.coordinator.receive_fragments(self.so_id, fragments)
 
     def _apply_prune(self) -> None:

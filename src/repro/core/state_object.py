@@ -41,7 +41,10 @@ class StateObject(abc.ABC):
         """Recover (or roll back) to ``version``; return its metadata."""
 
     def Prune(self, version: int) -> None:  # optional
-        """``version`` and all preceding versions may be discarded."""
+        """Versions *preceding* ``version`` may be discarded; ``version``
+        itself must stay listable — it is the durable floor anchor the
+        fragment-GC'd resend path ships to a recovering coordinator
+        (DESIGN.md §11)."""
 
     @abc.abstractmethod
     def ListVersions(self) -> List[Tuple[int, bytes]]:
@@ -220,7 +223,8 @@ class VersionStore:
 
     def list_versions(self) -> List[Tuple[int, bytes]]:
         out: List[Tuple[int, bytes]] = []
-        for p in sorted(self.root.glob("v*.blob")):
+        # numeric order, not lexical (v10 after v9, not between v1 and v2)
+        for p in sorted(self.root.glob("v*.blob"), key=lambda p: int(p.stem[1:])):
             version = int(p.stem[1:])
             try:
                 with open(p, "rb") as f:

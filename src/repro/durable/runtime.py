@@ -109,4 +109,11 @@ class DurableRuntime(DSERuntime):
                 pass  # transient fabric fault: poll again next beat
             self.clock.sleep(self.config.barrier_poll_interval)
         with self._mu:
-            return Vertex(self.so_id, world, label)
+            vertex = Vertex(self.so_id, world, label)
+        # Eager fragment GC (DESIGN.md §11): the durable baseline persists
+        # one version per action, so leaving pruning to the background
+        # Refresh lets the store (and every reconnect/resend) grow by the
+        # full action rate between boundary ships. The floor was durably
+        # exposed before this commit returned, so pruning here is sound.
+        self._apply_prune()
+        return vertex

@@ -107,14 +107,17 @@ class NetCluster(LocalCluster):
     def _make_coordinator(self):
         if self.n_shards:
             coord = ShardedCoordinator(
-                self.root / "coord", n_shards=self.n_shards, clock=self.clock
+                self.root / "coord",
+                n_shards=self.n_shards,
+                clock=self.clock,
+                **self._store_kw,
             )
             for shard in coord.shards:
                 self.transport.register(
                     f"coord/{shard.shard_id}", self._shard_handler(shard.shard_id)
                 )
         else:
-            coord = Coordinator(self.root / "coordinator.jsonl")
+            coord = Coordinator(self.root / "coordinator.jsonl", **self._store_kw)
             self.transport.register("coord", self._coord_handler())
         return coord
 

@@ -76,10 +76,19 @@ class CoordinatorShard(Coordinator):
         bus: "DecisionBus",
         recovery_timeout: float = 30.0,
         clock: Clock = REAL_CLOCK,
+        *,
+        checkpoint_records: Optional[int] = 256,
+        checkpoint_bytes: int = 1 << 20,
     ) -> None:
         self.shard_id = shard_id
         self._bus = bus
-        super().__init__(log_path, recovery_timeout, clock=clock)
+        super().__init__(
+            log_path,
+            recovery_timeout,
+            clock=clock,
+            checkpoint_records=checkpoint_records,
+            checkpoint_bytes=checkpoint_bytes,
+        )
         bus.register_shard(self)
 
     # -- state the bus reads (never under this shard's lock from the bus
@@ -87,6 +96,16 @@ class CoordinatorShard(Coordinator):
     def replayed_decisions(self) -> List[RollbackDecision]:
         with self._lock:
             return list(self._decisions)
+
+    def current_fsn(self) -> int:
+        """The fsn counter this shard's durable store recovered — may exceed
+        max(replayed decisions) when the snapshot retired the whole prefix."""
+        with self._lock:
+            return self._fsn
+
+    def retired_upto(self) -> int:
+        with self._lock:
+            return self._retired_upto
 
     def graph_view(self) -> DependencyGraph:
         return self._graph  # DependencyGraph is internally locked
@@ -115,6 +134,11 @@ class CoordinatorShard(Coordinator):
         """Broadcast arm: durably append a (possibly remote-origin) decision
         to this shard's log and apply its truncations to local members."""
         with self._lock:
+            if decision.fsn <= self._retired_upto:
+                # this shard's compactor already proved the decision can
+                # never match anything again; re-appending it (a catch-up
+                # from a slower shard's replay) would just regrow the log
+                return
             i = bisect.bisect_left(self._decision_fsns, decision.fsn)
             if i < len(self._decision_fsns) and self._decision_fsns[i] == decision.fsn:
                 return  # already committed to this shard's log
@@ -125,6 +149,24 @@ class CoordinatorShard(Coordinator):
                     self._graph.truncate(so, t)
             self._dirty = True
         self._bus.mark_dirty()
+
+    # -- snapshot + compaction (DESIGN.md §11) ----------------------------- #
+    def checkpoint(self, floor: Optional[Dict[str, int]] = None) -> int:
+        """Checkpoint this shard at ``floor`` — the cross-shard consistent
+        cut (the bus's global exposure-floor estimate). Fetched WITHOUT the
+        shard lock held when not supplied (the bus reaches across shards)."""
+        if floor is None:
+            floor = self._bus.global_boundary() or {}
+        with self._lock:
+            return self._checkpoint_locked(dict(floor))
+
+    def maybe_checkpoint(self, floor: Dict[str, int]) -> None:
+        """Auto-compaction arm, driven by the bus's boundary recompute (the
+        base class's trigger rides ``_boundary_locked``, which sharded
+        deployments never take — their floor lives on the bus)."""
+        with self._lock:
+            if self._log.should_checkpoint():
+                self._checkpoint_locked(dict(floor))
 
     # -- merged-view hooks (called WITHOUT self._lock, see Coordinator) --- #
     def _world(self) -> int:
@@ -199,12 +241,16 @@ class DecisionBus:
         # after the broadcast), silently losing the decision.
         with self._decide_lock:
             replayed = shard.replayed_decisions()
+            # the shard's recovered counter can exceed its replayed decisions
+            # when its snapshot retired the whole prefix (DESIGN.md §11)
+            shard_fsn = shard.current_fsn()
             with self._dlock:
                 self._shards = [s for s in self._shards if s.shard_id != shard.shard_id]
                 self._shards.append(shard)
                 self._shards.sort(key=lambda s: s.shard_id)
                 for d in replayed:
                     self._decisions.setdefault(d.fsn, d)
+                self._fsn = max(self._fsn, shard_fsn)
                 if self._decisions:
                     self._fsn = max(self._fsn, max(self._decisions))
             # catch the shard up on decisions it missed while down (its log
@@ -237,12 +283,19 @@ class DecisionBus:
             merged = DependencyGraph()
             for shard in self.shards():
                 merged.merge_from(shard.graph_view())
+            # pre-truncation tops: the retirement witness (see Coordinator._decide)
+            tops = merged.committed_watermarks()
             merged.truncate(failed_so, surviving)
             targets = merged.rollback_targets(failed_so, surviving)
             with self._dlock:
                 fsn = self._fsn + 1
                 self._fsn = fsn
-            decision = RollbackDecision(fsn=fsn, failed=failed_so, targets=targets)
+            decision = RollbackDecision(
+                fsn=fsn,
+                failed=failed_so,
+                targets=targets,
+                lost={so: tops.get(so, t) for so, t in targets.items()},
+            )
             for shard in self.shards():
                 shard.commit_decision(decision)
             with self._dlock:
@@ -293,6 +346,17 @@ class DecisionBus:
                     self._bseq += 1
                 for s in shards:
                     s.prune_to(est)
+                    # auto-compaction: same thread that prunes (holds no
+                    # shard lock), same consistent cross-shard cut
+                    s.maybe_checkpoint(est)
+                # a decision every shard's compactor retired is globally
+                # dead — drop it from the volatile union too, so Connect
+                # responses ship O(retained) decisions
+                retired = min((s.retired_upto() for s in shards), default=0)
+                if retired:
+                    with self._dlock:
+                        for fsn in [f for f in self._decisions if f <= retired]:
+                            del self._decisions[fsn]
             if known_seq == self._bseq:
                 return None, self._bseq  # nothing moved: no dict shipped
             return dict(self._bcache), self._bseq
@@ -315,17 +379,27 @@ class ShardedCoordinator:
         recovery_timeout: float = 30.0,
         vnodes: int = 64,
         clock: Clock = REAL_CLOCK,
+        checkpoint_records: Optional[int] = 256,
+        checkpoint_bytes: int = 1 << 20,
     ) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.n_shards = n_shards
         self._recovery_timeout = recovery_timeout
         self.clock = clock
+        self._store_kw = dict(
+            checkpoint_records=checkpoint_records, checkpoint_bytes=checkpoint_bytes
+        )
         self.ring = HashRing(list(range(n_shards)), vnodes=vnodes)
         self.bus = DecisionBus(recovery_timeout, clock=clock)
         self.shards: List[CoordinatorShard] = [
             CoordinatorShard(
-                i, self.root / f"shard{i}.jsonl", self.bus, recovery_timeout, clock=clock
+                i,
+                self.root / f"shard{i}.jsonl",
+                self.bus,
+                recovery_timeout,
+                clock=clock,
+                **self._store_kw,
             )
             for i in range(n_shards)
         ]
@@ -367,27 +441,39 @@ class ShardedCoordinator:
             self.bus,
             self._recovery_timeout,
             clock=self.clock,
+            **self._store_kw,
         )
         old.close()
         return self.shards[idx]
+
+    # -- snapshot + compaction (DESIGN.md §11) ------------------------------- #
+    def checkpoint(self) -> List[int]:
+        """Checkpoint every shard at one consistent cross-shard cut — the
+        bus's current exposure-floor estimate (None while any shard is
+        collecting fragments => an empty floor: still rotates, retires
+        nothing). Returns the new generation per shard."""
+        floor = self.bus.global_boundary() or {}
+        return [s.checkpoint(floor) for s in self.shards]
 
     # -- introspection / lifecycle ------------------------------------------ #
     def current_boundary(self) -> Optional[Dict[str, int]]:
         return self.bus.global_boundary()
 
     def stats(self) -> Dict[str, object]:
-        members: List[str] = []
-        for s in self.shards:
-            members.extend(s.member_ids())
+        per_shard = {s.shard_id: s.stats() for s in self.shards}  # one lock trip each
         return {
-            "members": sorted(members),
+            "members": sorted(m for st in per_shard.values() for m in st["members"]),
             "fsn": self.bus.fsn(),
             "decisions": len(self.bus.all_decisions()),
             "shards": self.n_shards,
-            "per_shard_members": {s.shard_id: sorted(s.member_ids()) for s in self.shards},
+            "per_shard_members": {sid: st["members"] for sid, st in per_shard.items()},
             "awaiting": sorted(
-                so for s in self.shards if s.is_awaiting for so in s.stats()["awaiting"]
+                so for st in per_shard.values() for so in st["awaiting"]
             ),
+            "checkpoints": sum(s.checkpoints for s in self.shards),
+            # durable store generations survive shard restarts (manifest),
+            # unlike the per-object ``checkpoints`` counters
+            "log_generations": {sid: st["log_generation"] for sid, st in per_shard.items()},
         }
 
     def close(self) -> None:

@@ -192,9 +192,25 @@ class LogCore:
             self._commits = commits
             return meta
 
+    def _floor(self) -> int:
+        try:
+            return int((self.root / "floor").read_text())
+        except (FileNotFoundError, ValueError):
+            return -1
+
     def list_versions(self) -> List[Tuple[int, bytes]]:
+        """Commit records at or above the durable floor's anchor — the
+        greatest persisted version <= the floor stays listable (the anchor
+        contract of ``StateObject.Prune``), everything below it is pruned
+        from the listing so reconnects/resends ship O(live), not the whole
+        segment history (DESIGN.md §11)."""
+        recs = self._disk_segments()
+        floor = self._floor()
+        anchor = max((r["version"] for r in recs if r["version"] <= floor), default=None)
         return [
-            (rec["version"], bytes.fromhex(rec["meta"])) for rec in self._disk_segments()
+            (rec["version"], bytes.fromhex(rec["meta"]))
+            for rec in recs
+            if anchor is None or rec["version"] >= anchor
         ]
 
     def prune(self, version: int) -> None:

@@ -162,6 +162,12 @@ class SimCluster:
                 self.cluster.restart_shard(int(arg["idx"]) % self.n_shards)
         elif ev.kind == "restart_coordinator":
             self.cluster.restart_coordinator()
+        elif ev.kind == "checkpoint":
+            # a no-op on clusters built with compaction disabled — the
+            # store owns that contract (CompactingLog.checkpoint), so the
+            # snapshot-vs-replay differential can replay one plan on both
+            # configurations without per-site guards.
+            self.cluster.checkpoint()
         elif ev.kind == "partition":
             self.transport.partition(*[set(g) for g in arg["groups"]])
         elif ev.kind == "heal":

@@ -99,6 +99,7 @@ def _run_side(
     plan: FaultPlan,
     runtime: str,
     horizon: float = 0.8,
+    sim_kw: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, Any]:
     from ..services.kv_store import SpeculativeKVStore
     from ..services.workflow import WorkflowEngine
@@ -111,6 +112,7 @@ def _run_side(
         refresh_interval=0.005,
         group_commit_interval=0.01,
         call_timeout=20.0,
+        **(sim_kw or {}),
     )
     scripts = _kv_scripts(seed) if workload == "kv" else None
     # workflow workload shape: several small staggered workflows (see
@@ -233,6 +235,12 @@ def _run_side(
             wf_id: (sim.get("wf").workflow_state(wf_id) or {}).get("status")
             for wf_id in obs["outcomes"]
         }
+        # durable-store generations (vacuity witness for the snapshot
+        # differential: the compact side must actually have compacted)
+        stats = sim.cluster.coordinator.stats()
+        obs["store_generations"] = sum(
+            dict(stats.get("log_generations", {})).values()
+        ) or int(stats.get("log_generation", 0))
         return obs
 
     result = sim.run(scenario, plan=plan)
@@ -248,6 +256,35 @@ def _run_side(
 # --------------------------------------------------------------------------- #
 # the oracle: replay on both runtimes, diff committed observations            #
 # --------------------------------------------------------------------------- #
+def _diff_observations(
+    oracle: Dict[str, Any], subject: Dict[str, Any], a: str, b: str
+) -> List[str]:
+    """Divergences between two sides' committed observations (workflow
+    outcomes, final durable state, workflow statuses); ``a``/``b`` label the
+    oracle and subject sides in the messages."""
+    divergences: List[str] = []
+    for wf_id in sorted(set(oracle["outcomes"]) | set(subject["outcomes"])):
+        o, s = oracle["outcomes"].get(wf_id), subject["outcomes"].get(wf_id)
+        if o is None or s is None:
+            divergences.append(
+                f"{wf_id} never completed ({a}={o is not None}, {b}={s is not None})"
+            )
+        elif o != s:
+            divergences.append(f"{wf_id} committed results diverge: {a}={o} {b}={s}")
+    if oracle["final"] != subject["final"]:
+        diff = {
+            k: (oracle["final"].get(k), subject["final"].get(k))
+            for k in sorted(set(oracle["final"]) | set(subject["final"]))
+            if oracle["final"].get(k) != subject["final"].get(k)
+        }
+        divergences.append(f"final committed state diverges ({a}, {b}): {diff}")
+    if oracle["wf_state"] != subject["wf_state"]:
+        divergences.append(
+            f"workflow statuses diverge: {a}={oracle['wf_state']} {b}={subject['wf_state']}"
+        )
+    return divergences
+
+
 def run_differential(
     workload: str, seed: int, root: Path, plan: Optional[FaultPlan] = None
 ) -> SimResult:
@@ -258,29 +295,7 @@ def run_differential(
         for rt in ("durable", "dse")
     }
     oracle, subject = sides["durable"], sides["dse"]
-
-    divergences: List[str] = []
-    for wf_id in sorted(set(oracle["outcomes"]) | set(subject["outcomes"])):
-        o, s = oracle["outcomes"].get(wf_id), subject["outcomes"].get(wf_id)
-        if o is None or s is None:
-            divergences.append(
-                f"{wf_id} never completed (durable={o is not None}, dse={s is not None})"
-            )
-        elif o != s:
-            divergences.append(
-                f"{wf_id} committed results diverge: durable={o} dse={s}"
-            )
-    if oracle["final"] != subject["final"]:
-        diff = {
-            k: (oracle["final"].get(k), subject["final"].get(k))
-            for k in sorted(set(oracle["final"]) | set(subject["final"]))
-            if oracle["final"].get(k) != subject["final"].get(k)
-        }
-        divergences.append(f"final committed state diverges (durable, dse): {diff}")
-    if oracle["wf_state"] != subject["wf_state"]:
-        divergences.append(
-            f"workflow statuses diverge: durable={oracle['wf_state']} dse={subject['wf_state']}"
-        )
+    divergences = _diff_observations(oracle, subject, "durable", "dse")
     if divergences:
         raise InvariantViolation(
             f"[differential_{workload} seed={seed}] DSE diverges from the durable "
@@ -307,3 +322,88 @@ def differential_workflow_scenario(
     """The TravelReservations-style try_reserve workload on both runtimes:
     outcomes, inventory, and reservation markers must match exactly."""
     return run_differential("workflow", seed, root, plan)
+
+
+# --------------------------------------------------------------------------- #
+# snapshot-vs-replay: compaction must be observationally invisible            #
+# --------------------------------------------------------------------------- #
+def default_snapshot_plan(seed: int, horizon: float = 0.9) -> FaultPlan:
+    """Long-horizon crash/restart schedule with compaction points pinned
+    between them: every seed exercises checkpoint → shard restart →
+    recovery-from-snapshot+suffix at least twice, on top of the random
+    crash/partition schedule."""
+    plan = FaultPlan.random(
+        seed,
+        so_ids=["kv", "wf"],
+        horizon=horizon,
+        n_shards=2,
+        allow_crash=True,
+    )
+    for at in (0.12, 0.3, 0.48, 0.66):
+        plan.checkpoint(at)
+    plan.restart_shard(0.2, seed % 2)
+    plan.restart_shard(0.55, (seed + 1) % 2)
+    # full coordinator-service restarts: the DecisionBus survives single
+    # shard restarts and would mask a broken snapshot (state re-seeded from
+    # the bus); only a full restart rebuilds everything from the durable
+    # stores — the path the snapshot actually carries.
+    plan.restart_coordinator(0.4)
+    plan.restart_coordinator(0.72)
+    return plan
+
+
+def run_store_differential(
+    workload: str, seed: int, root: Path, plan: Optional[FaultPlan] = None
+) -> SimResult:
+    """Replay one seeded history + fault plan on two identically-seeded DSE
+    clusters: one with snapshot compaction armed (tight auto threshold +
+    the plan's explicit checkpoint events, so shard restarts recover from
+    snapshot + log suffix), one with compaction disabled (restarts replay
+    the full log — the seed-era recovery path). Committed observations must
+    match op-for-op: a compaction bug is precisely the kind of silent
+    divergence this oracle exists to catch (DESIGN.md §11). Scheduling
+    differs between the sides (checkpoints perturb the interleaving), which
+    is exactly why the drivers' committed results are scheduling-invariant
+    by construction — same argument as the runtime differential above."""
+    if plan is None:
+        plan = default_snapshot_plan(seed)
+    sides = {
+        mode: _run_side(workload, seed, Path(root) / mode, plan, "dse", sim_kw=kw)
+        for mode, kw in (
+            ("replay", {"checkpoint_records": None}),
+            ("compact", {"checkpoint_records": 6}),
+        )
+    }
+    oracle, subject = sides["replay"], sides["compact"]
+    divergences = _diff_observations(oracle, subject, "replay", "compact")
+    if divergences:
+        raise InvariantViolation(
+            f"[snapshot_recovery_{workload} seed={seed}] recovery from "
+            "snapshot+suffix diverges from full replay: " + " | ".join(divergences)
+        )
+    if not subject.get("store_generations", 0):
+        raise InvariantViolation(
+            f"[snapshot_recovery_{workload} seed={seed}] the compact side "
+            "never checkpointed — the differential ran vacuously"
+        )
+
+    result: SimResult = subject.pop("_result")
+    oracle.pop("_result", None)
+    result.value = {"replay": oracle, "compact": subject}
+    return result
+
+
+def snapshot_recovery_kv_scenario(
+    seed: int, root: Path, plan: Optional[FaultPlan] = None
+) -> SimResult:
+    """Disjoint-key workflow scripts over kv under crashes + shard restarts:
+    committed results with compaction must equal the full-replay run's."""
+    return run_store_differential("kv", seed, root, plan)
+
+
+def snapshot_recovery_workflow_scenario(
+    seed: int, root: Path, plan: Optional[FaultPlan] = None
+) -> SimResult:
+    """try_reserve workload: compaction must not change outcomes, inventory,
+    or reservation markers relative to full-replay recovery."""
+    return run_store_differential("workflow", seed, root, plan)

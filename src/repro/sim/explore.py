@@ -28,6 +28,11 @@ Scenarios (registry ``SCENARIOS``):
   (``sim/differential.py``): one seeded history + fault plan replayed on
   both the DSE and the synchronous durable runtime; committed results must
   match op-for-op (durable = oracle).
+* ``snapshot_recovery_kv`` / ``snapshot_recovery_workflow`` — the
+  snapshot-vs-replay oracle (DESIGN.md §11): one seeded history + long-
+  horizon crash/restart plan with interleaved checkpoints, replayed on a
+  compaction-armed cluster and a full-replay cluster; recovery from
+  snapshot+suffix must be observationally identical to full replay.
 """
 from __future__ import annotations
 
@@ -46,8 +51,11 @@ from ..net import LinkSpec
 from .cluster import RecordingClient, SimCluster, SimResult
 from .differential import (
     default_differential_plan,
+    default_snapshot_plan,
     differential_kv_scenario,
     differential_workflow_scenario,
+    snapshot_recovery_kv_scenario,
+    snapshot_recovery_workflow_scenario,
 )
 from .faults import FaultPlan
 from .invariants import (
@@ -93,6 +101,8 @@ def default_plan(scenario: str, seed: int) -> FaultPlan:
         )
     if scenario in ("differential_kv", "differential_workflow"):
         return default_differential_plan(seed)
+    if scenario in ("snapshot_recovery_kv", "snapshot_recovery_workflow"):
+        return default_snapshot_plan(seed)
     if scenario == "crash_commit":
         return FaultPlan().crash(0.055, "prod")  # mid group-commit interval
     if scenario == "partition_merge":
@@ -732,6 +742,8 @@ SCENARIOS: Dict[str, Scenario] = {
     "two_phase_commit": two_phase_commit_scenario,
     "differential_kv": differential_kv_scenario,
     "differential_workflow": differential_workflow_scenario,
+    "snapshot_recovery_kv": snapshot_recovery_kv_scenario,
+    "snapshot_recovery_workflow": snapshot_recovery_workflow_scenario,
 }
 
 

@@ -31,6 +31,7 @@ BENIGN = (
     "clear_method_link",
     "restart_shard",
     "restart_coordinator",
+    "checkpoint",
 )
 
 _METHOD_CLASSES = ("report", "poll", "receive_fragments", "increment", "put", "get")
@@ -68,6 +69,15 @@ class FaultPlan:
 
     def restart_coordinator(self, at: float) -> "FaultPlan":
         self.events.append(FaultEvent(at, "restart_coordinator", {}))
+        return self
+
+    def checkpoint(self, at: float) -> "FaultPlan":
+        """Snapshot-compact the coordinator's durable store (DESIGN.md §11)
+        — not a fault, but scheduled like one so compaction lands at
+        adversarial moments relative to crashes and restarts. A no-op on
+        clusters built with compaction disabled (the snapshot-vs-replay
+        differential runs the same plan on both)."""
+        self.events.append(FaultEvent(at, "checkpoint", {}))
         return self
 
     def partition(self, at: float, *groups: Sequence[str]) -> "FaultPlan":

@@ -23,7 +23,6 @@ run produces:
 """
 from __future__ import annotations
 
-import json
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -212,41 +211,52 @@ class WatermarkMonitor:
 # --------------------------------------------------------------------------- #
 # per-shard durable-log prefix consistency                                     #
 # --------------------------------------------------------------------------- #
-def _parse_log(path: Path) -> List[dict]:
+def _durable_decisions(base: Path) -> Tuple[int, List[dict]]:
+    """The decision records a (possibly snapshot-rotated) coordinator log
+    durably holds, in replay order, plus its ``retired_upto`` watermark:
+    snapshot-retained decisions first, then the JSONL suffix (torn tail
+    writes tolerated by ``read_durable_log``, same as recovery itself)."""
+    from repro.store import decode_snapshot, read_durable_log
+
+    retired = 0
+    _, blob, records = read_durable_log(base)
     out: List[dict] = []
-    try:
-        raw = path.read_bytes()
-    except FileNotFoundError:
-        return out
-    for line in raw.splitlines():
-        line = line.strip()
-        if not line:
-            continue
-        try:
-            out.append(json.loads(line.decode()))
-        except Exception:
-            break  # torn tail write: same tolerance as CoordinatorLog.replay
-    return out
+    if blob is not None:
+        snap = decode_snapshot(blob)
+        retired = snap.retired_upto
+        out += [{"type": "decision", **d.to_json()} for d in snap.decisions]
+    out += [r for r in records if r.get("type") == "decision"]
+    return retired, out
 
 
 def check_shard_logs(coord_root: Path) -> List[str]:
     """Prefix-consistency of the coordinator's durable logs (module docstring).
-    Works on a sharded root (``shard*.jsonl``) or a singleton log file."""
+    Works on a sharded root (``shard*.jsonl`` bases, rotated or not) or a
+    singleton log path. Retirement-aware (DESIGN.md §11): a decision absent
+    from a log is only an error if that log has NOT retired it — a shard
+    whose compactor proved the decision dead is allowed to forget it."""
     coord_root = Path(coord_root)
-    if coord_root.is_file():
-        logs = {coord_root.name: _parse_log(coord_root)}
+    if coord_root.is_file() or coord_root.with_name(
+        coord_root.name + ".manifest"
+    ).exists():
+        bases = [coord_root]
     else:
-        logs = {
-            p.name: _parse_log(p) for p in sorted(coord_root.glob("shard*.jsonl"))
+        # a rotated shard's base file is gone — discover via manifests too
+        found = set(coord_root.glob("shard*.jsonl"))
+        found |= {
+            p.with_name(p.name[: -len(".manifest")])
+            for p in coord_root.glob("shard*.jsonl.manifest")
         }
+        bases = sorted(found)
     errors: List[str] = []
     decisions_by_log: Dict[str, Dict[int, dict]] = {}
-    for name, records in logs.items():
+    retired_by_log: Dict[str, int] = {}
+    for base in bases:
+        name = base.name
+        retired_by_log[name], records = _durable_decisions(base)
         fsns: List[int] = []
         per: Dict[int, dict] = {}
         for rec in records:
-            if rec.get("type") != "decision":
-                continue
             fsn = int(rec["fsn"])
             fsns.append(fsn)
             per[fsn] = rec
@@ -262,7 +272,8 @@ def check_shard_logs(coord_root: Path) -> List[str]:
         for name in names:
             rec = decisions_by_log[name].get(fsn)
             if rec is None:
-                errors.append(f"{name}: missing broadcast decision fsn={fsn}")
+                if fsn > retired_by_log[name]:
+                    errors.append(f"{name}: missing broadcast decision fsn={fsn}")
                 continue
             if seen_rec is None:
                 seen_rec = (name, rec)

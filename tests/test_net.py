@@ -357,3 +357,103 @@ class TestReportRequeueDedup:
             coord.report("x", [r])
             coord.report("x", [r])
             assert coord.stats()["dup_reports_dropped"] == 0
+
+
+class TestFragmentGC:
+    """PR-5 regression (DESIGN.md §11): fragment resends must ship O(live)
+    state — versions strictly below the durable exposure floor (whose
+    watermark the coordinator's snapshot already records) and stale blobs a
+    decision has invalidated stay home, and the coordinator must recover a
+    boundary at least as fresh from the GC'd resend alone."""
+
+    def _capture_resends(self, cluster, so):
+        """Wrap the runtime's coordinator handle, recording resent batches
+        (installed AFTER restart_coordinator, which refreshes the handle)."""
+        real = so.runtime.coordinator
+        captured = []
+
+        class Recording:
+            def receive_fragments(self, so_id, fragments):
+                captured.append(list(fragments))
+                real.receive_fragments(so_id, fragments)
+
+            def __getattr__(self, name):
+                return getattr(real, name)
+
+        so.runtime.coordinator = Recording()
+        return captured
+
+    def test_resend_skips_below_floor_keeps_anchor(self, tmp_path):
+        from repro.core import LocalCluster
+        from repro.core.ids import encode_metadata
+        from repro.services.counter import CounterStateObject
+
+        from conftest import settle, wait_committed
+
+        with LocalCluster(
+            tmp_path / "c", refresh_interval=None, group_commit_interval=99
+        ) as cluster:
+            so = cluster.add("a", lambda: CounterStateObject(tmp_path / "so_a"))
+            for _ in range(4):
+                so.increment(None)
+                assert wait_committed(so, so.runtime.maybe_persist(force=True))
+            assert settle(
+                lambda: so.runtime.boundary.get("a", -1) >= 2, cluster
+            ), "boundary never advanced"
+            floor = so.runtime.boundary["a"]
+            before = cluster.coordinator.current_boundary()
+            # simulate a lagging prune: below-floor history still on disk
+            # (the background Prune has not caught up with the boundary)
+            for v in range(floor):
+                so.store.write(v, b"0", encode_metadata(0, v, []))
+
+            cluster.restart_coordinator()
+            captured = self._capture_resends(cluster, so)
+            assert settle(
+                lambda: cluster.coordinator.current_boundary() is not None, cluster
+            ), "coordinator never recovered"
+            assert captured, "restart must trigger a fragment resend"
+            # the anchor: greatest persisted label <= the floor watermark
+            anchor = max(l for l in so.runtime.stats()["labels"] if l <= floor)
+            versions = sorted(r.vertex.version for r in captured[0])
+            assert all(v >= anchor for v in versions), versions  # GC'd resend
+            assert versions[0] == anchor, versions  # ...but the anchor ships
+            after = cluster.coordinator.current_boundary()
+            assert after.get("a", -1) >= before.get("a", -1)  # nothing lost
+
+    def test_resend_skips_decision_invalidated_stale_blobs(self, tmp_path):
+        """An innocent member rolled back below its persisted top keeps the
+        stale blobs on disk (paper §5.3 note) — but must not keep shipping
+        them on every resend: the decision already proves they are dead."""
+        from repro.core import LocalCluster
+        from repro.core.ids import Vertex
+        from repro.services.counter import CounterStateObject
+
+        from conftest import settle, wait_committed
+
+        with LocalCluster(
+            tmp_path / "c", refresh_interval=None, group_commit_interval=99
+        ) as cluster:
+            a = cluster.add("a", lambda: CounterStateObject(tmp_path / "so_a"))
+            b = cluster.add("b", lambda: CounterStateObject(tmp_path / "so_b"))
+            # b persists state depending on a's IN-MEMORY (never persisted)
+            # version; a's crash then invalidates b's persisted suffix.
+            out = a.increment(None)
+            assert out is not None
+            _, h = out
+            assert b.increment(h) is not None
+            assert wait_committed(b, b.runtime.maybe_persist(force=True))
+            stale_top = b.runtime.stats()["committed"]
+            cluster.kill("a")
+            assert settle(lambda: b.runtime.world >= 1, cluster)
+            idx = b.runtime._dindex
+            assert idx.invalidates(Vertex("b", 0, stale_top)), "setup: no rollback"
+
+            cluster.restart_coordinator()
+            captured = self._capture_resends(cluster, b)
+            assert settle(
+                lambda: cluster.coordinator.current_boundary() is not None, cluster
+            )
+            assert captured
+            resent = captured[0]
+            assert all(not idx.invalidates(r.vertex) for r in resent), resent

@@ -59,16 +59,25 @@ class TestWorkflowResumeDriver:
 
 class TestSpecLogPrune:
     def test_floor_hides_old_versions_keeps_data(self, cluster_factory, tmp_path):
-        c = cluster_factory(group_commit_interval=0.005)
+        # no background refresher: the steady-state boundary prune would
+        # already collapse the listing (the very behaviour under test)
+        c = cluster_factory(refresh_interval=None, group_commit_interval=99)
         log = c.add("log", lambda: SpeculativeLog(tmp_path / "log"))
         for i in range(3):
             log.append(f"e{i}".encode())
-            log.runtime.maybe_persist(force=True)
-            time.sleep(0.02)
-        log.core.prune(2)
+            assert wait_committed(log, log.runtime.maybe_persist(force=True))
+        before = [v for v, _ in log.core.list_versions()]
+        assert len(before) >= 3  # the Connect floor + forced persists
+        anchor = before[-2]  # prune at a real persisted label
+        log.core.prune(anchor)
+        # below-floor commit records drop from the listing (O(live)
+        # reconnects, DESIGN.md §11) but the anchor — the greatest version
+        # <= the floor — must stay listable (StateObject.Prune contract)
+        versions = [v for v, _ in log.core.list_versions()]
+        assert versions == [v for v in before if v >= anchor]
+        assert anchor in versions and len(versions) < len(before)
         # restore chain from version >= floor still reads ALL data
         log.core.drop_memory()
-        versions = [v for v, _ in log.core.list_versions()]
         log.core.restore(max(versions))
         assert [d for _, d in log.core.scan(0)] == [b"e0", b"e1", b"e2"]
 

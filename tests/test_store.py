@@ -1,0 +1,337 @@
+"""repro.store unit tests (DESIGN.md §11): snapshot/manifest codec strictness,
+crash-safe checkpointing (exhaustive crash-point recovery), decision
+retirement soundness, and coordinator snapshot+suffix ≡ full-replay
+equivalence. The whole-system counterpart runs under deterministic
+simulation (``snapshot_recovery_*`` scenarios, pinned in
+``tests/scenarios/regression_seeds.json``).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.coordinator import Coordinator
+from repro.core.ids import (
+    PersistReport,
+    RollbackDecision,
+    Vertex,
+    decode_decision,
+    encode_decision,
+)
+from repro.store import (
+    FAILPOINTS,
+    CheckpointCrash,
+    CompactingLog,
+    CoordinatorSnapshot,
+    decode_manifest,
+    decode_snapshot,
+    encode_manifest,
+    encode_snapshot,
+)
+
+
+def rich_snapshot() -> CoordinatorSnapshot:
+    return CoordinatorSnapshot(
+        fsn=7,
+        retired_upto=3,
+        members=["a", "b", "naïve-so"],
+        decisions=[
+            RollbackDecision(4, "a", {"a": 2, "b": 3}, lost={"a": 5, "b": 3}),
+            RollbackDecision(7, "b", {"a": -1, "b": 0}),  # legacy: no lost
+        ],
+        graph={
+            "a": [(2, []), (5, [("b", 3), ("naïve-so", 0)])],
+            "b": [(3, [("a", 2)])],
+            "naïve-so": [(0, [])],
+        },
+        floor={"a": 2, "b": 3, "naïve-so": -1},
+        report_seen={"a": {(0, 1), (4, 0)}, "b": {(0, 0)}},
+    )
+
+
+class TestSnapshotCodec:
+    def test_round_trip(self):
+        s = rich_snapshot()
+        s2 = decode_snapshot(encode_snapshot(s))
+        assert (
+            s2.fsn,
+            s2.retired_upto,
+            s2.members,
+            s2.decisions,
+            s2.graph,
+            s2.floor,
+            s2.report_seen,
+        ) == (s.fsn, s.retired_upto, sorted(s.members), s.decisions, s.graph, s.floor, s.report_seen)
+
+    def test_empty_round_trip(self):
+        s2 = decode_snapshot(encode_snapshot(CoordinatorSnapshot()))
+        assert s2 == CoordinatorSnapshot()
+
+    def test_every_truncated_prefix_rejected(self):
+        blob = encode_snapshot(rich_snapshot())
+        for i in range(len(blob)):
+            with pytest.raises(ValueError):
+                decode_snapshot(blob[:i])
+
+    def test_trailing_garbage_rejected(self):
+        blob = encode_snapshot(rich_snapshot())
+        with pytest.raises(ValueError):
+            decode_snapshot(blob + b"\x00")
+
+    def test_unknown_version_rejected(self):
+        blob = bytearray(encode_snapshot(CoordinatorSnapshot()))
+        # layout: magic, kind, string table (empty => one 0 byte), version
+        blob[3] = 99
+        with pytest.raises(ValueError, match="version"):
+            decode_snapshot(bytes(blob))
+
+    def test_manifest_round_trip_and_strictness(self):
+        for gen in (0, 1, 300):
+            assert decode_manifest(encode_manifest(gen)) == gen
+        blob = encode_manifest(300)
+        for i in range(len(blob)):
+            with pytest.raises(ValueError):
+                decode_manifest(blob[:i])
+        with pytest.raises(ValueError):
+            decode_manifest(blob + b"\x01")
+
+    def test_decision_lost_round_trip_binary_and_json(self):
+        d = RollbackDecision(5, "x", {"x": 1, "y": 2}, lost={"x": 9, "y": 2})
+        assert decode_decision(encode_decision(d)) == d
+        assert RollbackDecision.from_json(d.to_json()) == d
+        legacy = RollbackDecision(5, "x", {"x": 1})
+        assert "lost" not in legacy.to_json()  # old readers stay compatible
+        assert RollbackDecision.from_json(legacy.to_json()) == legacy
+
+
+RECORDS = [
+    {"type": "member", "so_id": "a"},
+    {"type": "member", "so_id": "b"},
+    {"type": "decision", "fsn": 1, "failed": "a", "targets": {"a": 0, "b": 0}, "lost": {"a": 2, "b": 1}},
+    {"type": "decision", "fsn": 2, "failed": "b", "targets": {"a": 3, "b": 1}, "lost": {"a": 3, "b": 4}},
+]
+
+
+class TestCompactingLogCrashPoints:
+    """The compactor's contract: a crash after ANY step recovers either the
+    whole old generation or the whole new one — never a mix, never a loss."""
+
+    def _fill(self, log: CompactingLog, records=RECORDS) -> None:
+        for rec in records:
+            log.append(rec)
+
+    @pytest.mark.parametrize("failpoint", FAILPOINTS)
+    @pytest.mark.parametrize("warm", [False, True], ids=["gen0", "gen1"])
+    def test_every_crash_prefix_recovers(self, tmp_path, failpoint, warm):
+        base = tmp_path / "log.jsonl"
+        old_blob = None
+        # huge threshold: explicit checkpoints allowed, auto-trigger quiet
+        log = CompactingLog(base, checkpoint_records=10**9)
+        if warm:
+            # start from generation 1 so the crash also interrupts the
+            # deletion of a real previous generation
+            old_blob = encode_snapshot(CoordinatorSnapshot(fsn=1, members=["z"]))
+            log.checkpoint(old_blob)
+        self._fill(log)
+        new_blob = encode_snapshot(rich_snapshot())
+        with pytest.raises(CheckpointCrash):
+            log.checkpoint(new_blob, _failpoint=failpoint)
+        log.close()
+
+        recovered = CompactingLog(base)  # the restarted process
+        # interrupted-checkpoint orphans (snap/wal/manifest temp files and
+        # uncommitted generations) are swept on open
+        assert not list(tmp_path.glob("*.tmp"))
+        blob, suffix = recovered.replay()
+        committed = failpoint in ("manifest-swapped", "rotated")
+        if committed:
+            assert blob == new_blob
+            assert suffix == []
+        else:
+            # old generation intact: snapshot AND the full record suffix
+            assert blob == old_blob
+            assert suffix == RECORDS
+        # the store must still be fully operational after the crash
+        recovered.append({"type": "member", "so_id": "late"})
+        recovered.checkpoint(new_blob)
+        recovered.append({"type": "member", "so_id": "later"})
+        recovered.close()
+        final = CompactingLog(base)
+        blob, suffix = final.replay()
+        assert blob == new_blob
+        assert suffix == [{"type": "member", "so_id": "later"}]
+        final.close()
+
+    def test_stale_generations_cleaned_after_commit(self, tmp_path):
+        base = tmp_path / "log.jsonl"
+        log = CompactingLog(base)
+        self._fill(log)
+        log.checkpoint(encode_snapshot(CoordinatorSnapshot(fsn=1)))
+        log.checkpoint(encode_snapshot(CoordinatorSnapshot(fsn=2)))
+        log.close()
+        names = sorted(p.name for p in tmp_path.iterdir())
+        assert names == ["log.jsonl.manifest", "log.jsonl.snap.2", "log.jsonl.wal.2"]
+
+    def test_auto_trigger_thresholds(self, tmp_path):
+        log = CompactingLog(tmp_path / "l.jsonl", checkpoint_records=3)
+        assert not log.should_checkpoint()
+        self._fill(log, RECORDS[:3])
+        assert log.should_checkpoint()
+        log.checkpoint(encode_snapshot(CoordinatorSnapshot()))
+        assert not log.should_checkpoint()
+        disabled = CompactingLog(tmp_path / "l2.jsonl", checkpoint_records=None)
+        self._fill(disabled, RECORDS)
+        assert not disabled.should_checkpoint()
+        # the store OWNS the disabled contract: even an explicit checkpoint
+        # is a no-op (the snapshot-vs-replay oracle's full-replay side
+        # depends on a disabled store never rotating)
+        assert disabled.checkpoint(encode_snapshot(CoordinatorSnapshot())) == 0
+        assert disabled.replay() == (None, RECORDS)
+        log.close()
+        disabled.close()
+
+    def test_torn_wal_tail_tolerated_after_rotation(self, tmp_path):
+        base = tmp_path / "log.jsonl"
+        log = CompactingLog(base)
+        blob = encode_snapshot(CoordinatorSnapshot(fsn=3))
+        log.checkpoint(blob)
+        log.append(RECORDS[0])
+        log.close()
+        with open(tmp_path / "log.jsonl.wal.1", "ab") as f:
+            f.write(b'{"type": "member", "so_id": "tor')  # torn write
+        blob2, suffix = CompactingLog(base).replay()
+        assert blob2 == blob
+        assert suffix == [RECORDS[0]]
+
+
+class TestDecisionRetirement:
+    """The compactor's retirement rule (DESIGN.md §11): a decision leaves
+    the durable cut only when every target's exposure floor has strictly
+    passed its lost window; prefix-only; legacy (lost-free) decisions are
+    immortal."""
+
+    def _coord(self, tmp_path, **kw) -> Coordinator:
+        return Coordinator(tmp_path / "c.jsonl", **kw)
+
+    def _checkpoint_at(self, coord: Coordinator, floor) -> None:
+        with coord._lock:
+            coord._checkpoint_locked(dict(floor))
+
+    def test_floor_must_strictly_pass_lost(self, tmp_path):
+        coord = self._coord(tmp_path)
+        d1 = RollbackDecision(1, "a", {"a": 2, "b": 3}, lost={"a": 5, "b": 3})
+        with coord._lock:
+            coord._note_decision(d1)
+        self._checkpoint_at(coord, {"a": 5, "b": 4})  # floor == lost["a"]
+        assert coord.stats()["decisions"] == 1  # retained
+        self._checkpoint_at(coord, {"a": 6, "b": 4})  # strictly past both
+        st = coord.stats()
+        assert st["decisions"] == 0 and st["retired_upto"] == 1
+        coord.close()
+
+    def test_prefix_only_retirement(self, tmp_path):
+        coord = self._coord(tmp_path)
+        d1 = RollbackDecision(1, "a", {"a": 0}, lost={"a": 9})  # floor not past
+        d2 = RollbackDecision(2, "b", {"b": 0}, lost={"b": 1})  # floor past
+        with coord._lock:
+            coord._note_decision(d1)
+            coord._note_decision(d2)
+        self._checkpoint_at(coord, {"a": 4, "b": 7})
+        st = coord.stats()
+        # d2 is individually dead but must wait behind d1: the durable cut
+        # records one retired_upto watermark, not a sieve
+        assert st["decisions"] == 2 and st["retired_upto"] == 0
+        coord.close()
+
+    def test_legacy_decisions_never_retire(self, tmp_path):
+        coord = self._coord(tmp_path)
+        with coord._lock:
+            coord._note_decision(RollbackDecision(1, "a", {"a": 0}))  # no lost
+        self._checkpoint_at(coord, {"a": 99})
+        assert coord.stats()["decisions"] == 1
+        coord.close()
+
+    def test_retirement_survives_restart(self, tmp_path):
+        coord = self._coord(tmp_path)
+        with coord._lock:
+            coord._note_decision(RollbackDecision(1, "a", {"a": 0}, lost={"a": 1}))
+        self._checkpoint_at(coord, {"a": 5})
+        assert coord.stats()["retired_upto"] == 1
+        coord.close()
+        coord2 = self._coord(tmp_path)
+        st = coord2.stats()
+        assert st["retired_upto"] == 1 and st["fsn"] == 1 and st["decisions"] == 0
+        coord2.close()
+
+
+class TestCoordinatorSnapshotRecovery:
+    """snapshot + suffix must recover the same coordinator a full replay
+    builds — driven through the public participant API twin-style."""
+
+    def _drive(self, coord: Coordinator, checkpoint_midway: bool) -> None:
+        coord.connect("a", [])
+        coord.connect("b", [])
+        coord.report("a", [PersistReport(Vertex("a", 0, 0), (), seq=0)])
+        coord.report("b", [PersistReport(Vertex("b", 0, 0), (Vertex("a", 0, 0),), seq=0)])
+        # failure: "a" reconnects having lost nothing durable
+        coord.connect("a", [PersistReport(Vertex("a", 0, 0), ())])
+        if checkpoint_midway:
+            coord.checkpoint()
+        world = coord._world()
+        coord.report("a", [PersistReport(Vertex("a", world, 1), (), seq=1)])
+        coord.report("b", [PersistReport(Vertex("b", world, 1), (Vertex("a", world, 1),), seq=1)])
+
+    def _recovered_view(self, coord: Coordinator):
+        # a restarted coordinator serves boundaries only after resends
+        world = coord._world()
+        coord.receive_fragments("a", [PersistReport(Vertex("a", world, 1), ())])
+        coord.receive_fragments(
+            "b", [PersistReport(Vertex("b", world, 1), (Vertex("a", world, 1),))]
+        )
+        st = coord.stats()
+        return (
+            st["members"],
+            st["fsn"],
+            [d.to_json() for d in coord._all_decisions()],
+            coord.current_boundary(),
+            coord._graph.export_state(),
+        )
+
+    def test_snapshot_plus_suffix_equals_full_replay(self, tmp_path):
+        twin = {}
+        for name, checkpointed in (("plain", False), ("compacted", True)):
+            # huge threshold: the explicit mid-drive checkpoint is the only one
+            coord = Coordinator(tmp_path / f"{name}.jsonl", checkpoint_records=10**9)
+            self._drive(coord, checkpoint_midway=checkpointed)
+            coord.close()
+            restarted = Coordinator(tmp_path / f"{name}.jsonl")
+            twin[name] = self._recovered_view(restarted)
+            restarted.close()
+        assert twin["plain"] == twin["compacted"]
+
+    def test_report_seen_survives_the_cut(self, tmp_path):
+        """A pre-crash flush's transport retry landing after a snapshot
+        recovery must still be single-counted (the durable cut carries the
+        per-SO flush seqs)."""
+        coord = Coordinator(tmp_path / "c.jsonl")
+        coord.connect("a", [])
+        r = PersistReport(Vertex("a", 0, 0), (), seq=0)
+        coord.report("a", [r])
+        coord.checkpoint()
+        coord.close()
+        coord2 = Coordinator(tmp_path / "c.jsonl")
+        coord2.report("a", [r])  # the retry of the pre-crash delivery
+        assert coord2.stats()["dup_reports_dropped"] == 1
+        coord2.close()
+
+    def test_stats_makes_no_graph_deep_copy(self, tmp_path):
+        coord = Coordinator(tmp_path / "c.jsonl")
+        coord.connect("a", [])
+        coord.report("a", [PersistReport(Vertex("a", 0, 0), (), seq=0)])
+
+        def boom():  # pragma: no cover - called means regression
+            raise AssertionError("stats() must not deep-copy the graph")
+
+        coord._graph.snapshot = boom
+        st = coord.stats()
+        assert st["graph_vertices"] == 1 and st["members"] == ["a"]
+        coord.close()
